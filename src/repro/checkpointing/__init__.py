@@ -1,0 +1,2 @@
+from . import store
+from .store import elastic_reshard, latest_step, restore, save

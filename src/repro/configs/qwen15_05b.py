@@ -1,0 +1,8 @@
+"""qwen1.5-0.5b [dense] — QKV bias. [hf:Qwen/Qwen1.5-0.5B; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="qwen1.5-0.5b", family="dense",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=2816, vocab=151_936, qkv_bias=True, tie_embeddings=True,
+)

@@ -1,0 +1,45 @@
+"""Space-Control core: process-level isolation for shared disaggregated memory.
+
+Paper components -> modules:
+  SPACE engine        -> repro.core.space.SpaceEngine
+  Permission table    -> repro.core.table (PermissionTable / HostTable)
+  Permission checker  -> repro.core.checker.check_access
+  Permission cache    -> repro.core.cache.LruCache
+  Fabric manager      -> repro.core.fm.FabricManager
+  SDM integration     -> repro.core.pool (SharedTensorPool / checked_gather)
+"""
+from .cache import LruCache
+from .checker import (
+    FAULT_NO_ABITS,
+    FAULT_NO_ENTRY,
+    FAULT_NONE,
+    FAULT_NOT_LOCAL,
+    FAULT_PERM,
+    CheckResult,
+    binary_search,
+    check_access,
+    make_hwpid_local,
+)
+from .crypto import arx_mac32, arx_mac64, derive_key, hmac_label
+from .fm import BISnpEvent, FabricManager, Proposal
+from .pool import GatherResult, Region, SharedTensorPool, checked_gather
+from .space import RING_KERNEL, RING_USER, SpaceEngine
+from .table import (
+    ENTRY_BYTES,
+    HWPID_SHIFT,
+    MAX_HWPID,
+    PAGE_BYTES,
+    PERM_NONE,
+    PERM_R,
+    PERM_RW,
+    PERM_W,
+    HostTable,
+    PermissionTable,
+    extract_perm,
+    make_table,
+    pack_ext_addr,
+    perm_words_for,
+    unpack_ext_addr,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,125 @@
+"""Permission checker (paper §4.2.3).
+
+On-chip unit placed after the LLC.  Every LD/ST of a trusted process carries
+A-bits (HWPID) tagged into the extended physical address.  The checker:
+
+  1. verifies the A-bits against HWPID_local (per-host trusted bit-vector),
+  2. binary-searches the sorted permission table for the address's entry,
+  3. extracts the 2-bit permission for (HWPID) and enforces R/W,
+  4. raises a fault code on violation (paper: interrupt on access violation).
+
+The jnp implementation below is the framework's *functional* checker (used by
+checked_gather and the property tests); the Pallas kernel in
+``repro.kernels.permcheck`` is the TPU hot-path implementation of step 2-3 and
+is validated against ``repro.kernels.ref``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .table import (
+    EMPTY_START,
+    PermissionTable,
+    extract_perm,
+    unpack_ext_addr,
+)
+
+# Fault codes
+FAULT_NONE = 0
+FAULT_NO_ABITS = 1        # untagged access to SDM (untrusted process)
+FAULT_NOT_LOCAL = 2       # HWPID not in HWPID_local (wrong host / revoked)
+FAULT_NO_ENTRY = 3        # no permission entry covers the address
+FAULT_PERM = 4            # entry found but R/W bits deny the access
+
+
+class CheckResult(NamedTuple):
+    allowed: jax.Array      # bool[B]
+    fault: jax.Array        # i32[B] fault codes
+    entry_idx: jax.Array    # i32[B] matched entry (-1 if none)
+    probes: jax.Array       # i32[B] binary-search probe count (occupancy stats)
+
+
+def binary_search(starts: jax.Array, n: jax.Array, pages: jax.Array):
+    """Textbook binary search with early exit accounting.
+
+    Returns (idx, probes): idx = index of last entry with start <= page
+    (-1 if none); probes = number of table entries touched, matching the
+    paper's 'binary-search occupancy' metric (Fig. 9).  Runs a fixed
+    ceil(log2(cap))+1 iteration loop (jit-friendly) while counting only the
+    iterations a sequential searcher would have executed.
+    """
+    cap = starts.shape[0]
+    steps = int(np.ceil(np.log2(max(cap, 2)))) + 1
+    pages = jnp.asarray(pages, jnp.int32)
+    lo = jnp.zeros_like(pages)
+    hi = jnp.broadcast_to(jnp.asarray(n, jnp.int32) - 1, pages.shape)
+    idx = jnp.full_like(pages, -1)
+    probes = jnp.zeros_like(pages)
+
+    def body(_, carry):
+        lo, hi, idx, probes = carry
+        active = lo <= hi
+        mid = (lo + hi) // 2
+        s = starts[jnp.clip(mid, 0, cap - 1)]
+        probes = probes + active.astype(jnp.int32)
+        go_right = s <= pages
+        idx = jnp.where(active & go_right, mid, idx)
+        lo = jnp.where(active & go_right, mid + 1, lo)
+        hi = jnp.where(active & ~go_right, mid - 1, hi)
+        return lo, hi, idx, probes
+
+    lo, hi, idx, probes = jax.lax.fori_loop(0, steps, body, (lo, hi, idx, probes))
+    return idx, probes
+
+
+def check_access(
+    table: PermissionTable,
+    hwpid_local: jax.Array,     # u32[4] bit-vector of trusted HWPIDs on host
+    ext_addrs: jax.Array,       # i32[B] A-bit tagged page addresses
+    is_write: jax.Array,        # bool[B]
+) -> CheckResult:
+    """Vectorized permission check for a batch of tagged accesses."""
+    hwpid, page = unpack_ext_addr(ext_addrs)
+    is_write = jnp.asarray(is_write, bool)
+
+    # (1) A-bits present and locally trusted
+    has_abits = hwpid > 0
+    word = hwpid_local[jnp.clip(hwpid // 32, 0, 3)]
+    local_ok = ((word >> (hwpid % 32).astype(jnp.uint32)) & 1).astype(bool)
+
+    # (2) sorted-table search
+    idx, probes = binary_search(table.starts, table.n, page)
+    safe_idx = jnp.clip(idx, 0, table.capacity - 1)
+    s = table.starts[safe_idx]
+    sz = table.sizes[safe_idx]
+    in_range = (idx >= 0) & (page >= s) & (page < s + sz) & (s != EMPTY_START)
+
+    # (3) permission bits for this HWPID
+    pw = table.perms[safe_idx]
+    perm = extract_perm(pw, hwpid)
+    need = jnp.where(is_write, jnp.uint32(2), jnp.uint32(1))
+    perm_ok = (perm & need) == need
+
+    allowed = has_abits & local_ok & in_range & perm_ok
+    fault = jnp.where(
+        ~has_abits, FAULT_NO_ABITS,
+        jnp.where(~local_ok, FAULT_NOT_LOCAL,
+                  jnp.where(~in_range, FAULT_NO_ENTRY,
+                            jnp.where(~perm_ok, FAULT_PERM, FAULT_NONE))))
+    fault = jnp.where(allowed, FAULT_NONE, fault).astype(jnp.int32)
+    return CheckResult(allowed, fault, jnp.where(in_range, idx, -1), probes)
+
+
+def make_hwpid_local(hwpids) -> jax.Array:
+    """Build the per-host trusted HWPID bit-vector (u32[4])."""
+    v = np.zeros((4,), np.uint32)
+    for h in hwpids:
+        v[h // 32] |= np.uint32(1) << np.uint32(h % 32)
+    return jnp.asarray(v)
+
+
+check_access_jit = jax.jit(check_access)

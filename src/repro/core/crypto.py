@@ -1,0 +1,82 @@
+"""Cryptographic primitives for Space-Control.
+
+Two planes:
+  * Control plane (trusted FM / SPACE firmware): real HMAC-SHA-256 via hashlib.
+    This is what generates L_exp and L_host (paper Eq. 1 / Eq. 2).
+  * Data plane (per-access, traceable): a jnp ARX MAC used where a label must be
+    recomputed inside a jitted region (e.g. property tests of the checker).
+
+Labels are 64-bit (the paper stores L_exp in a 64-bit shadow register), taken as
+the first 8 bytes of the HMAC output.
+"""
+from __future__ import annotations
+
+import hashlib
+import hmac as _hmac
+import struct
+
+import jax.numpy as jnp
+import numpy as np
+
+LABEL_BITS = 64
+
+
+def hmac_label(key: bytes, *fields: int) -> int:
+    """HMAC-SHA-256 over packed u64 fields, truncated to 64 bits.
+
+    Used for both L_exp = MAC_{K_FM}(host_id, HWPID, BASE_P, range) and
+    L_host = MAC_{K_host}(BASE_P, HWPID, ctr).
+    """
+    msg = b"".join(struct.pack("<Q", f & 0xFFFFFFFFFFFFFFFF) for f in fields)
+    dig = _hmac.new(key, msg, hashlib.sha256).digest()
+    return struct.unpack("<Q", dig[:8])[0]
+
+
+def derive_key(master: bytes, purpose: str) -> bytes:
+    """KDF for per-host keys (K_host) from the FM master secret."""
+    return hashlib.sha256(master + b"|" + purpose.encode()).digest()
+
+
+# ---------------------------------------------------------------------------
+# Traceable ARX MAC (threefry-2x32 inspired).  NOT a control-plane primitive —
+# used to model the hardware MAC engine inside jitted code and in the memcrypt
+# keystream reference.  Rotation schedule from the Threefry-2x32 paper.
+# ---------------------------------------------------------------------------
+_ROTATIONS = (13, 15, 26, 6, 17, 29, 16, 24)
+_PARITY = np.uint32(0x1BD11BDA)
+N_ROUNDS = 12  # 12 of 20 rounds: the hardware engine trades margin for 1-cycle
+
+
+def _rotl(x, r):
+    return (x << r) | (x >> (32 - r))
+
+
+def arx_mac32(key0, key1, msg0, msg1, rounds: int = N_ROUNDS):
+    """Threefry-like 2x32 block function. All args uint32 arrays (broadcast).
+
+    Returns (x0, x1) uint32. Pure jnp — usable inside jit / Pallas ref.
+    """
+    k0 = jnp.asarray(key0, jnp.uint32)
+    k1 = jnp.asarray(key1, jnp.uint32)
+    k2 = k0 ^ k1 ^ jnp.uint32(_PARITY)
+    x0 = jnp.asarray(msg0, jnp.uint32) + k0
+    x1 = jnp.asarray(msg1, jnp.uint32) + k1
+    ks = (k0, k1, k2)
+    for rnd in range(rounds):
+        r = _ROTATIONS[rnd % 8]
+        x0 = x0 + x1
+        x1 = _rotl(x1, r) ^ x0
+        if rnd % 4 == 3:
+            j = rnd // 4 + 1
+            x0 = x0 + ks[j % 3]
+            x1 = x1 + ks[(j + 1) % 3] + jnp.uint32(j)
+    return x0, x1
+
+
+def arx_mac64(key: int, msg_lo, msg_hi) -> jnp.ndarray:
+    """64-bit MAC tag from two u32 message words, as a (lo, hi) u32 pair packed
+    into int64-free representation: returns uint32 array stacked on last axis."""
+    k0 = np.uint32(key & 0xFFFFFFFF)
+    k1 = np.uint32((key >> 32) & 0xFFFFFFFF)
+    t0, t1 = arx_mac32(k0, k1, msg_lo, msg_hi)
+    return jnp.stack([t0, t1], axis=-1)

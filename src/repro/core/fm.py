@@ -1,0 +1,128 @@
+"""Fabric Manager extensions (paper §4.2.4).
+
+The FM is the trusted coordination point: it owns K_FM, approves proposed
+permission-table entries, commits them (coalescing overlaps), issues public
+labels L_exp, and broadcasts BISnp back-invalidates on every committed update
+so host-side permission caches drop stale entries (paper §4.1.3 / §7.1.7).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from .crypto import derive_key, hmac_label
+from .space import SpaceEngine
+from .table import HostTable, MAX_HWPID, perm_words_for
+
+
+@dataclass
+class Proposal:
+    """An entry_t written to the 'proposed update' metadata section (Fig. 2)."""
+    host_id: int
+    hwpid: int
+    base_p: int
+    start_page: int
+    n_pages: int
+    perm: int  # PERM_R / PERM_W / PERM_RW requested for this hwpid
+
+
+@dataclass
+class BISnpEvent:
+    start_page: int
+    n_pages: int
+
+
+class FabricManager:
+    """Trusted control plane for a shared-SDM deployment."""
+
+    def __init__(self, sdm_pages: int, table_capacity: int,
+                 master_secret: bytes = b"space-control-fm-master"):
+        self._k_fm = derive_key(master_secret, "K_FM")
+        self.sdm_pages = sdm_pages
+        self.table = HostTable(table_capacity)
+        self.hosts: dict[int, SpaceEngine] = {}
+        # deployment-wide HWPID pool: entries key perms by HWPID alone, so
+        # SDM HWPIDs must be globally unique (see SpaceEngine docstring)
+        self._free_hwpids: list[int] = list(range(1, MAX_HWPID + 1))
+        self._hwpid_global: set[int] = set()
+        self._bisnp_listeners: list[Callable[[BISnpEvent], None]] = []
+        self.audit_log: list[str] = []
+        self._policy: Callable[[Proposal], bool] = lambda p: True
+
+    # -- host enrolment --------------------------------------------------------
+    def enroll_host(self, host_id: int, n_cores: int = 8) -> SpaceEngine:
+        if host_id in self.hosts:
+            raise ValueError(f"host {host_id} already enrolled")
+        if len(self.hosts) >= 255:
+            raise RuntimeError("up to 255 hosts (paper abstract)")
+        k_host = derive_key(self._k_fm, f"K_host:{host_id}")
+        eng = SpaceEngine(host_id, k_host, n_cores,
+                          free_hwpids=self._free_hwpids)
+        self.hosts[host_id] = eng
+        return eng
+
+    def set_policy(self, fn: Callable[[Proposal], bool]) -> None:
+        """Operator policy deciding approval (paper: 'the FM ... decides
+        whether to approve the request')."""
+        self._policy = fn
+
+    def on_bisnp(self, fn: Callable[[BISnpEvent], None]) -> None:
+        self._bisnp_listeners.append(fn)
+
+    # -- proposal -> approve -> commit -> label (Fig. 2 workflow) --------------
+    def propose(self, p: Proposal) -> int | None:
+        """Returns L_exp on approval, None on rejection."""
+        if p.host_id not in self.hosts:
+            self.audit_log.append(f"REJECT unknown host {p.host_id}")
+            return None
+        if not (1 <= p.hwpid <= MAX_HWPID):
+            self.audit_log.append(f"REJECT bad hwpid {p.hwpid}")
+            return None
+        if p.start_page < 0 or p.start_page + p.n_pages > self.sdm_pages:
+            self.audit_log.append(f"REJECT range [{p.start_page},+{p.n_pages})")
+            return None
+        if not self._policy(p):
+            self.audit_log.append(f"REJECT policy {p}")
+            return None
+        # Commit: FM optimizes/coalesces overlapping entries (paper §4.1.1)
+        self.table.insert(p.start_page, p.n_pages,
+                          perm_words_for({p.hwpid: p.perm}),
+                          owner_host=p.host_id)
+        self._hwpid_global.add(p.hwpid)
+        # L_exp = MAC_{K_FM}(host_id, HWPID, BASE_P, range)   (Eq. 1)
+        label = hmac_label(self._k_fm, p.host_id, p.hwpid, p.base_p,
+                           (p.start_page << 24) | p.n_pages)
+        self.hosts[p.host_id].install_lexp(
+            p.hwpid, p.base_p, label, (p.start_page, p.n_pages))
+        self._broadcast(BISnpEvent(p.start_page, p.n_pages))
+        self.audit_log.append(
+            f"COMMIT host={p.host_id} hwpid={p.hwpid} "
+            f"[{p.start_page},+{p.n_pages}) perm={p.perm}")
+        return label
+
+    def revoke_hwpid(self, hwpid: int) -> None:
+        """Revocation: clear permissions, drop empty entries, BISnp all hosts."""
+        self.table.remove_hwpid(hwpid)
+        self._hwpid_global.discard(hwpid)
+        self._broadcast(BISnpEvent(0, self.sdm_pages))
+        self.audit_log.append(f"REVOKE hwpid={hwpid}")
+
+    def hwpid_global(self) -> set[int]:
+        """HWPID_global = union over hosts (paper §4.2.2)."""
+        return set(self._hwpid_global)
+
+    def _broadcast(self, ev: BISnpEvent) -> None:
+        for fn in self._bisnp_listeners:
+            fn(ev)
+
+    # -- storage accounting (paper §7.2 / Eq. 3-4) ------------------------------
+    def storage_overhead_fraction(self) -> float:
+        """Worst-case metadata fraction: 64 B per 4 KiB page = 1.5625 %."""
+        worst_entries = self.sdm_pages
+        return worst_entries * 64 / (self.sdm_pages * 4096)
+
+    @property
+    def k_fm(self) -> bytes:   # exposed for attestation tests only
+        return self._k_fm

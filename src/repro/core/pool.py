@@ -1,0 +1,114 @@
+"""Shared tensor pool — the framework-level SDM (DESIGN.md §2).
+
+Maps named tensors (MoE expert shards, KV-cache pages, embedding shards) into
+one flat 4 KiB-page-addressed space, so Space-Control range entries can guard
+them.  `checked_gather` is the LD/ST egress point: every row gather from the
+pool is tagged with the tenant's A-bits and validated by the permission
+checker; denied rows are zero-filled and reported via fault codes — the
+dataflow analogue of the paper's response-side enforcement.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .checker import CheckResult, check_access
+from .table import PAGE_BYTES, PermissionTable, pack_ext_addr
+
+
+@dataclass(frozen=True)
+class Region:
+    name: str
+    start_page: int
+    n_pages: int
+    row_shape: tuple[int, ...]
+    dtype: np.dtype
+    rows: int
+
+    @property
+    def bytes_per_row(self) -> int:
+        return int(np.prod(self.row_shape)) * np.dtype(self.dtype).itemsize
+
+    def pages_for_rows(self, row_idx):
+        """Map row indices -> first page of each row (page-granular check)."""
+        bpr = max(self.bytes_per_row, 1)
+        byte_off = jnp.asarray(row_idx, jnp.int32) * bpr
+        return self.start_page + byte_off // PAGE_BYTES
+
+
+class SharedTensorPool:
+    """Page-space registry for shared tensors.
+
+    The data itself stays as ordinary (sharded) jax Arrays; the pool only
+    assigns page ranges so the permission machinery has addresses to check.
+    """
+
+    def __init__(self):
+        self._regions: dict[str, Region] = {}
+        self._tensors: dict[str, jax.Array] = {}
+        self._next_page = 1  # page 0 reserved (metadata section, Fig. 5)
+
+    def register(self, name: str, tensor: jax.Array) -> Region:
+        if name in self._regions:
+            raise ValueError(f"region {name} exists")
+        rows = tensor.shape[0]
+        row_shape = tuple(tensor.shape[1:])
+        bpr = int(np.prod(row_shape, dtype=np.int64)) * tensor.dtype.itemsize
+        n_pages = max(1, -(-rows * bpr // PAGE_BYTES))
+        region = Region(name, self._next_page, n_pages, row_shape,
+                        np.dtype(tensor.dtype), rows)
+        self._next_page += n_pages
+        self._regions[name] = region
+        self._tensors[name] = tensor
+        return region
+
+    def region(self, name: str) -> Region:
+        return self._regions[name]
+
+    def tensor(self, name: str) -> jax.Array:
+        return self._tensors[name]
+
+    def update(self, name: str, tensor: jax.Array) -> None:
+        assert tensor.shape[0] == self._regions[name].rows
+        self._tensors[name] = tensor
+
+    @property
+    def total_pages(self) -> int:
+        return self._next_page
+
+
+class GatherResult(NamedTuple):
+    data: jax.Array
+    check: CheckResult
+
+
+def checked_gather(
+    pool: SharedTensorPool,
+    name: str,
+    row_idx: jax.Array,
+    *,
+    hwpid: int,
+    table: PermissionTable,
+    hwpid_local: jax.Array,
+    is_write: bool = False,
+) -> GatherResult:
+    """Gather rows from a shared region under Space-Control enforcement.
+
+    Data gather and permission lookup proceed in parallel (as in the paper's
+    out-of-order issue); the verdict is applied at the response end: denied
+    rows are zero-filled, faults are reported in `check.fault`.
+    """
+    region = pool.region(name)
+    tensor = pool.tensor(name)
+    pages = region.pages_for_rows(row_idx)
+    ext = pack_ext_addr(jnp.full(pages.shape, hwpid, jnp.int32), pages)
+    check = check_access(table, hwpid_local,
+                         ext, jnp.full(pages.shape, is_write, bool))
+    data = jnp.take(tensor, jnp.asarray(row_idx, jnp.int32), axis=0)
+    mask = check.allowed.reshape(check.allowed.shape + (1,) * (data.ndim - 1))
+    data = jnp.where(mask, data, jnp.zeros_like(data))
+    return GatherResult(data, check)

@@ -1,0 +1,212 @@
+"""Permission table (paper §4.2.2).
+
+A sorted array of permission entries stored in the SDM.  Each entry covers an
+arbitrary page range [start, start + n_pages) and carries 2 permission bits
+(R, W) per global HWPID.  Layout is 64 B/entry (paper §7.2):
+
+    start:u32  n_pages:u32  perms: 2b x 128 HWPIDs (32 B)
+    owner_host:u8  flags:u8  label_idx:u16  pad -> 64 B
+
+In JAX the table is struct-of-arrays so the Pallas permission-check kernel can
+tile `starts` into VMEM:
+
+    starts : i32[cap]   (sorted; unused tail = INT32_MAX)
+    sizes  : i32[cap]
+    perms  : u32[cap, 8]   (128 HWPIDs x 2 bits)
+    meta   : u32[cap]      (owner_host | flags<<8 | label_idx<<16)
+    n      : i32[]         (live entry count)
+
+Addresses are 4 KiB-page granular (DESIGN.md §2): ext_addr = hwpid<<24 | page.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAGE_SHIFT = 12          # 4 KiB minimum protection granule (paper §7.2)
+PAGE_BYTES = 1 << PAGE_SHIFT
+HWPID_BITS = 7           # up to 127 processes (paper §5.2); 0 is reserved
+MAX_HWPID = (1 << HWPID_BITS) - 1
+HWPID_SHIFT = 24         # A-bits position in the 32-bit extended page address
+PAGE_MASK = (1 << HWPID_SHIFT) - 1
+ENTRY_BYTES = 64         # paper §7.2
+PERM_WORDS = 8           # 128 HWPIDs x 2 bits = 256 bits = 8 x u32
+EMPTY_START = np.int32(np.iinfo(np.int32).max)
+
+PERM_NONE = 0
+PERM_R = 1
+PERM_W = 2
+PERM_RW = 3
+
+
+class PermissionTable(NamedTuple):
+    starts: jax.Array   # i32[cap] sorted ascending, tail = EMPTY_START
+    sizes: jax.Array    # i32[cap]
+    perms: jax.Array    # u32[cap, PERM_WORDS]
+    meta: jax.Array     # u32[cap]
+    n: jax.Array        # i32[] live count
+
+    @property
+    def capacity(self) -> int:
+        return self.starts.shape[0]
+
+    def nbytes_metadata(self) -> int:
+        """Metadata bytes actually consumed (64 B per live entry)."""
+        return int(self.n) * ENTRY_BYTES
+
+
+def make_table(capacity: int) -> PermissionTable:
+    return PermissionTable(
+        starts=jnp.full((capacity,), EMPTY_START, jnp.int32),
+        sizes=jnp.zeros((capacity,), jnp.int32),
+        perms=jnp.zeros((capacity, PERM_WORDS), jnp.uint32),
+        meta=jnp.zeros((capacity,), jnp.uint32),
+        n=jnp.zeros((), jnp.int32),
+    )
+
+
+def pack_ext_addr(hwpid, page):
+    """Tag the A-bits: ext_addr = hwpid << 24 | page (paper §4.1.2)."""
+    hwpid = jnp.asarray(hwpid, jnp.int32)
+    page = jnp.asarray(page, jnp.int32)
+    return (hwpid << HWPID_SHIFT) | (page & PAGE_MASK)
+
+
+def unpack_ext_addr(ext):
+    ext = jnp.asarray(ext, jnp.int32)
+    return ext >> HWPID_SHIFT, ext & PAGE_MASK
+
+
+def perm_words_for(hwpid_to_perm: dict[int, int]) -> np.ndarray:
+    """Build the 8-word permission bitfield from {hwpid: PERM_*}."""
+    words = np.zeros((PERM_WORDS,), np.uint32)
+    for hwpid, p in hwpid_to_perm.items():
+        if not (0 <= hwpid <= MAX_HWPID):
+            raise ValueError(f"hwpid {hwpid} out of range")
+        if not (0 <= p <= 3):
+            raise ValueError(f"perm {p} out of range")
+        words[hwpid // 16] |= np.uint32(p) << np.uint32((hwpid % 16) * 2)
+    return words
+
+
+def extract_perm(perm_words, hwpid):
+    """Extract the 2-bit permission for `hwpid` from u32[..., 8] words."""
+    hwpid = jnp.asarray(hwpid, jnp.int32)
+    word = jnp.take_along_axis(
+        perm_words, (hwpid // 16)[..., None].astype(jnp.int32), axis=-1
+    )[..., 0]
+    shift = ((hwpid % 16) * 2).astype(jnp.uint32)
+    return (word >> shift) & jnp.uint32(3)
+
+
+# ---------------------------------------------------------------------------
+# Host-side (numpy) authoritative copy used by the Fabric Manager.  The FM owns
+# insertion / coalescing; hosts only read the committed table (paper Fig. 2).
+# ---------------------------------------------------------------------------
+
+class HostTable:
+    """Numpy mirror with FM-side mutation (sorted, non-overlapping ranges)."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.starts = np.full((capacity,), EMPTY_START, np.int32)
+        self.sizes = np.zeros((capacity,), np.int32)
+        self.perms = np.zeros((capacity, PERM_WORDS), np.uint32)
+        self.meta = np.zeros((capacity,), np.uint32)
+        self.n = 0
+
+    # -- FM operations ------------------------------------------------------
+    def insert(self, start: int, n_pages: int, perm_words: np.ndarray,
+               owner_host: int = 0, label_idx: int = 0) -> int:
+        """Insert an entry, splitting/merging overlaps (FM 'optimizes the
+        permission entry if entries' ranges overlap', paper §4.1.1).
+
+        Overlapping regions take the OR of permission words (grant union).
+        Returns the index of the (possibly merged) entry containing `start`.
+        """
+        if n_pages <= 0:
+            raise ValueError("n_pages must be positive")
+        segs = []  # (start, end, perms, meta) open intervals to re-emit
+        new = (start, start + n_pages, perm_words.astype(np.uint32),
+               np.uint32(owner_host | (label_idx << 16)))
+        keep = []
+        for i in range(self.n):
+            s, e = int(self.starts[i]), int(self.starts[i] + self.sizes[i])
+            if e <= new[0] or s >= new[1]:
+                keep.append((s, e, self.perms[i].copy(), self.meta[i]))
+            else:
+                # split non-overlapping flanks, OR the overlap
+                if s < new[0]:
+                    keep.append((s, new[0], self.perms[i].copy(), self.meta[i]))
+                if e > new[1]:
+                    keep.append((new[1], e, self.perms[i].copy(), self.meta[i]))
+                lo, hi = max(s, new[0]), min(e, new[1])
+                segs.append((lo, hi, self.perms[i] | new[2], new[3]))
+        # uncovered parts of the new range
+        covered = sorted((lo, hi) for lo, hi, _, _ in segs)
+        cur = new[0]
+        for lo, hi in covered:
+            if cur < lo:
+                segs.append((cur, lo, new[2].copy(), new[3]))
+            cur = max(cur, hi)
+        if cur < new[1]:
+            segs.append((cur, new[1], new[2].copy(), new[3]))
+        allseg = sorted(keep + segs, key=lambda t: t[0])
+        # coalesce adjacent segments with identical permissions
+        merged: list = []
+        for seg in allseg:
+            if merged and merged[-1][1] == seg[0] and \
+                    np.array_equal(merged[-1][2], seg[2]):
+                merged[-1] = (merged[-1][0], seg[1], merged[-1][2], merged[-1][3])
+            else:
+                merged.append(list(seg) if isinstance(seg, tuple) else seg)
+        merged = [tuple(m) for m in merged]
+        if len(merged) > self.capacity:
+            raise RuntimeError("permission table capacity exceeded")
+        self._rewrite(merged)
+        return int(np.searchsorted(self.starts[: self.n], start, side="right") - 1)
+
+    def remove_hwpid(self, hwpid: int) -> None:
+        """Revocation: clear a HWPID's bits everywhere; drop empty entries
+        (FM auto-cleans entries with no hosts, paper §4.1.3)."""
+        mask = ~(np.uint32(3) << np.uint32((hwpid % 16) * 2))
+        self.perms[: self.n, hwpid // 16] &= mask
+        live = [
+            (int(self.starts[i]), int(self.starts[i] + self.sizes[i]),
+             self.perms[i].copy(), self.meta[i])
+            for i in range(self.n) if self.perms[i].any()
+        ]
+        self._rewrite(live)
+
+    def _rewrite(self, segs) -> None:
+        self.starts[:] = EMPTY_START
+        self.sizes[:] = 0
+        self.perms[:] = 0
+        self.meta[:] = 0
+        for i, (s, e, p, m) in enumerate(segs):
+            self.starts[i] = s
+            self.sizes[i] = e - s
+            self.perms[i] = p
+            self.meta[i] = m
+        self.n = len(segs)
+
+    # -- export to device ----------------------------------------------------
+    def to_device(self) -> PermissionTable:
+        return PermissionTable(
+            starts=jnp.asarray(self.starts),
+            sizes=jnp.asarray(self.sizes),
+            perms=jnp.asarray(self.perms),
+            meta=jnp.asarray(self.meta),
+            n=jnp.asarray(self.n, jnp.int32),
+        )
+
+    def check_invariants(self) -> None:
+        s = self.starts[: self.n]
+        e = s + self.sizes[: self.n]
+        assert np.all(np.diff(s) > 0), "starts not strictly sorted"
+        assert np.all(e[:-1] <= s[1:]), "entries overlap"
+        assert np.all(self.sizes[: self.n] > 0), "empty live entry"
+        assert np.all(self.starts[self.n:] == EMPTY_START)

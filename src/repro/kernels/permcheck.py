@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: Space-Control permission check (paper §4.2.3).
+
+TPU-native rethinking of the paper's binary-search checker (DESIGN.md §7):
+instead of log2(N) serialized DRAM probes per access (the CPU/CXL cost
+structure), the sorted table shard lives in VMEM and the VPU evaluates the
+range/permission predicate for an (8, 128) block of tagged addresses against a
+(8, 128) tile of entries per step.  VMEM residency plays the role of the
+paper's permission cache: the table is loaded from HBM once per grid row, not
+per access.
+
+Layout:
+  addresses  i32[B]   -> grid-blocked (ADDR_BLOCK,) tiles, viewed (8, 128)
+  starts/ends i32[N]  -> whole-shard VMEM resident (index_map -> 0)
+  permbits   u32[N]   -> 2-bit field pre-extracted for the calling tenant
+  outputs    allowed u32[B] (0/1), idx i32[B]
+
+N is the *per-shard* entry count (<= MAX_ENTRIES = 8192 = 96 KiB of VMEM for
+the three arrays); the global table is range-partitioned across the "model"
+mesh axis (see repro.launch.sharding), mirroring the paper's table-in-SDM with
+per-host checkers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.table import HWPID_SHIFT, PAGE_MASK
+
+ADDR_BLOCK = 1024          # addresses per grid step = (8, 128) lanes
+ENTRY_TILE = 1024          # table entries folded per inner loop step
+MAX_ENTRIES = 8192
+
+
+def _permcheck_kernel(addr_ref, starts_ref, ends_ref, permbits_ref,
+                      allowed_ref, idx_ref, *, hwpid: int, need: int,
+                      n_entries: int):
+    ext = addr_ref[...].astype(jnp.int32).reshape(8, 128)
+    tag = ext >> HWPID_SHIFT
+    page = ext & PAGE_MASK
+    tag_ok = tag == jnp.int32(hwpid)
+
+    n_tiles = n_entries // ENTRY_TILE
+    needv = jnp.uint32(need)
+
+    def tile_step(t, carry):
+        any_hit, idx = carry
+        s = jax.lax.dynamic_slice(starts_ref[...], (t * ENTRY_TILE,),
+                                  (ENTRY_TILE,))
+        e = jax.lax.dynamic_slice(ends_ref[...], (t * ENTRY_TILE,),
+                                  (ENTRY_TILE,))
+        pb = jax.lax.dynamic_slice(permbits_ref[...], (t * ENTRY_TILE,),
+                                   (ENTRY_TILE,))
+        # (8, 128, ENTRY_TILE) predicate evaluated on the VPU
+        in_r = (page[..., None] >= s) & (page[..., None] < e)
+        ok = in_r & (((pb & needv) == needv)[None, None, :])
+        any_hit = any_hit | jnp.any(ok, axis=-1)
+        local = jnp.argmax(in_r, axis=-1).astype(jnp.int32) + t * ENTRY_TILE
+        idx = jnp.where(jnp.any(in_r, axis=-1) & (idx < 0), local, idx)
+        return any_hit, idx
+
+    any_hit = jnp.zeros((8, 128), bool)
+    idx = jnp.full((8, 128), -1, jnp.int32)
+    any_hit, idx = jax.lax.fori_loop(0, n_tiles, tile_step, (any_hit, idx))
+
+    allowed_ref[...] = (tag_ok & any_hit).astype(jnp.uint32).reshape(
+        allowed_ref.shape)
+    idx_ref[...] = idx.reshape(idx_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("hwpid", "need", "interpret"))
+def permcheck_pallas(ext_addrs, starts, ends, permbits, *, hwpid: int,
+                     need: int, interpret: bool = True):
+    """Blocked Pallas permission check.  Pads B to ADDR_BLOCK and N to
+    ENTRY_TILE; padding entries use INT32_MAX sentinels (never match)."""
+    b = ext_addrs.shape[0]
+    bp = -(-b // ADDR_BLOCK) * ADDR_BLOCK
+    n = starts.shape[0]
+    np_ = max(ENTRY_TILE, -(-n // ENTRY_TILE) * ENTRY_TILE)
+    if np_ > MAX_ENTRIES:
+        raise ValueError(
+            f"table shard has {n} entries > MAX_ENTRIES={MAX_ENTRIES}; "
+            "range-partition the table across the model axis")
+
+    ext = jnp.full((bp,), -1, jnp.int32).at[:b].set(
+        jnp.asarray(ext_addrs, jnp.int32))
+    smax = jnp.int32(np.iinfo(np.int32).max)
+    s = jnp.full((np_,), smax, jnp.int32).at[:n].set(
+        jnp.asarray(starts, jnp.int32))
+    e = jnp.full((np_,), smax, jnp.int32).at[:n].set(
+        jnp.asarray(ends, jnp.int32))
+    pb = jnp.zeros((np_,), jnp.uint32).at[:n].set(
+        jnp.asarray(permbits, jnp.uint32))
+
+    grid = (bp // ADDR_BLOCK,)
+    kernel = functools.partial(_permcheck_kernel, hwpid=hwpid, need=need,
+                               n_entries=np_)
+    allowed, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ADDR_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((np_,), lambda i: (0,)),
+            pl.BlockSpec((np_,), lambda i: (0,)),
+            pl.BlockSpec((np_,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ADDR_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((ADDR_BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp,), jnp.uint32),
+            jax.ShapeDtypeStruct((bp,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ext, s, e, pb)
+    return allowed[:b].astype(bool), idx[:b]

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package must match its oracle bit-exactly (integer
+kernels) or to float tolerance (flash attention) across the shape/dtype sweeps
+in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.crypto import arx_mac32
+from repro.core.table import HWPID_SHIFT, PAGE_MASK
+
+# ---------------------------------------------------------------------------
+# permcheck: Space-Control permission check (paper §4.2.3)
+# ---------------------------------------------------------------------------
+
+def permcheck(ext_addrs, starts, ends, permbits, *, hwpid: int, need: int):
+    """Oracle for the permission-check kernel.
+
+    Args:
+      ext_addrs: i32[B] A-bit tagged page addresses (hwpid<<24 | page).
+      starts:    i32[N] sorted range starts (pages); padding = INT32_MAX.
+      ends:      i32[N] range ends (exclusive); padding = INT32_MAX.
+      permbits:  u32[N] 2-bit permission field already extracted for `hwpid`.
+      hwpid:     the tenant context whose A-bits must match.
+      need:      required bits (1=R, 2=W, 3=RW).
+
+    Returns:
+      allowed: bool[B]
+      idx:     i32[B] matched entry index (-1 when no entry covers the page)
+    """
+    ext = jnp.asarray(ext_addrs, jnp.int32)
+    tag = ext >> HWPID_SHIFT
+    page = ext & PAGE_MASK
+    tag_ok = tag == hwpid
+
+    s = jnp.asarray(starts, jnp.int32)
+    e = jnp.asarray(ends, jnp.int32)
+    pb = jnp.asarray(permbits, jnp.uint32)
+    needv = jnp.uint32(need)
+
+    in_range = (page[:, None] >= s[None, :]) & (page[:, None] < e[None, :])
+    perm_ok = (pb[None, :] & needv) == needv
+    hit = in_range & perm_ok
+    allowed = tag_ok & jnp.any(hit, axis=1)
+    # sorted, non-overlapping ranges -> at most one in_range hit
+    idx = jnp.where(
+        jnp.any(in_range, axis=1),
+        jnp.argmax(in_range, axis=1).astype(jnp.int32),
+        jnp.int32(-1),
+    )
+    return allowed, idx
+
+
+# ---------------------------------------------------------------------------
+# memcrypt: counter-mode ARX line cipher (paper §4.2.3 memory encryption)
+# ---------------------------------------------------------------------------
+
+def memcrypt(data, key0: int, key1: int, base_word: int = 0):
+    """Oracle for the memory-encryption kernel.
+
+    data: u32[...]; each 32-bit word w at flat index i is XORed with the
+    keystream arx(key, line=(base_word+i)//16, word=(base_word+i)%16).
+    64-byte lines = 16 u32 words (paper: per-cache-line engine).
+    Encrypt == decrypt (XOR keystream).
+    """
+    d = jnp.asarray(data, jnp.uint32)
+    flat = d.reshape(-1)
+    idx = jnp.arange(flat.shape[0], dtype=jnp.uint32) + jnp.uint32(base_word)
+    line = idx // jnp.uint32(16)
+    word = idx % jnp.uint32(16)
+    ks0, _ = arx_mac32(np.uint32(key0), np.uint32(key1), line, word)
+    return (flat ^ ks0).reshape(d.shape)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (beyond-paper perf kernel; used in §Perf hillclimb)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """Oracle: plain softmax attention. q,k,v: [B, H, S, D] (k/v may have
+    fewer heads = GQA; heads are repeated)."""
+    if scale is None:
+        scale = 1.0 / np.sqrt(q.shape[-1])
+    hq, hk = q.shape[1], k.shape[1]
+    if hq != hk:
+        k = jnp.repeat(k, hq // hk, axis=1)
+        v = jnp.repeat(v, hq // hk, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)

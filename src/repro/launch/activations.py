@@ -1,0 +1,65 @@
+"""Activation sharding constraints (§Perf hillclimb iteration 1).
+
+Why: without explicit constraints the SPMD partitioner resolves the
+FSDP-weight (data-axis) vs batch-activation (data-axis) contraction
+conflict however it likes — on qwen3-4b train_4k it chose to ALL-GATHER
+THE BATCH and compute attention 16x redundantly per device
+(EXPERIMENTS.md §Perf, hypothesis H1).  Pinning the canonical activation
+layout (batch over the data axes, heads/ffn over "model") the way
+MaxText/EasyLM do removes the freedom to make that mistake.
+
+``constrain(x, spec...)`` is a no-op when no mesh context is active (CPU
+smoke tests) or when a dimension doesn't divide its axes (gemma3's 4 heads
+on a 16-way model axis) — same fallback philosophy as
+launch/sharding.RuleEngine.
+"""
+from __future__ import annotations
+
+import warnings
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+BATCH = ("pod", "data")   # all data-parallel axes
+MODEL = "model"
+
+
+def current_mesh():
+    """The ambient `with mesh:` context mesh, or None."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        try:
+            from jax.interpreters import pxla
+            m = pxla.thread_resources.env.physical_mesh
+        except Exception:  # noqa: BLE001 - jax internals moved
+            return None
+    return None if m is None or m.empty else m
+
+
+def _resolve(mesh, dim: int, want) -> tuple | None:
+    """Filter `want` down to axes present in the mesh that divide `dim`."""
+    if want is None:
+        return None
+    axes = tuple(a for a in (want if isinstance(want, tuple) else (want,))
+                 if a in mesh.axis_names)
+    if not axes:
+        return None
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+    return axes if total > 0 and dim % total == 0 else None
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint(x, P(spec...)) with divisibility fallback.
+
+    spec entries: None, an axis name, or a tuple of axis names; entries for
+    trailing dims may be omitted (replicated).  No-op without mesh context.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    full = list(spec) + [None] * (x.ndim - len(spec))
+    resolved = [_resolve(mesh, d, w) for d, w in zip(x.shape, full)]
+    if all(r is None for r in resolved):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*resolved))

@@ -1,0 +1,248 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape x mesh) cell:
+    jax.jit(step, in_shardings=..., out_shardings=...)
+        .lower(**input_specs(arch)).compile()
+must succeed; we record memory_analysis(), cost_analysis() and the collective
+bytes parsed from the SPMD HLO into experiments/dryrun/*.json — the roofline
+table (EXPERIMENTS.md §Roofline) is derived from these files.
+
+The two XLA_FLAGS lines above MUST stay the first statements: jax locks the
+device count on first init, and the production meshes need 512 host devices.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    build_prefill_step,
+    build_serve_step,
+    build_train_step,
+    opt_state_shapes,
+)
+from repro.models import registry
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"=\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum output bytes of collective ops in the (per-device SPMD) HLO."""
+    out: dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.lstrip()
+        body = stripped.split("=", 1)
+        if len(body) != 2:
+            continue
+        rhs = body[1]
+        op = None
+        for c in _COLLECTIVES:
+            if f" {c}(" in rhs or rhs.strip().startswith(c + "("):
+                op = c
+                break
+        if op is None or f" {op}-start" in rhs:
+            pass
+        if op is None:
+            # fused async forms: all-reduce-start etc.
+            for c in _COLLECTIVES:
+                if f"{c}-start(" in rhs:
+                    op = c
+                    break
+        if op is None:
+            continue
+        m = _SHAPE_RE.search(line)
+        if not m:
+            continue
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[op] += n * _DTYPE_BYTES[dt]
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """Build and lower the step for one (arch x shape) on `mesh`."""
+    batch_shapes = registry.input_specs(cfg, shape)
+    pshapes = registry.param_shapes(cfg)
+    pspecs = sh.param_spec_tree(cfg, mesh, pshapes)
+
+    if shape.kind == "train":
+        step = build_train_step(cfg)
+        oshapes = opt_state_shapes(cfg, pshapes)
+        ospecs = type(oshapes)(
+            step=jax.sharding.PartitionSpec(),
+            mu=pspecs, nu=pspecs)
+        bspecs = sh.batch_spec_tree(cfg, mesh, batch_shapes)
+        jitted = jax.jit(
+            step,
+            in_shardings=(sh.named(mesh, pspecs), sh.named(mesh, ospecs),
+                          sh.named(mesh, bspecs)),
+            out_shardings=(sh.named(mesh, pspecs), sh.named(mesh, ospecs),
+                           None),
+            donate_argnums=(0, 1),   # params/opt updated in place
+        )
+        args = (pshapes, oshapes, batch_shapes)
+    elif shape.kind == "prefill":
+        step = build_prefill_step(cfg)
+        bspecs = sh.batch_spec_tree(cfg, mesh, batch_shapes)
+        cshapes = jax.eval_shape(step, pshapes, batch_shapes)[1]
+        cspecs = sh.cache_spec_tree(cfg, mesh, cshapes)
+        jitted = jax.jit(
+            step,
+            in_shardings=(sh.named(mesh, pspecs), sh.named(mesh, bspecs)),
+            out_shardings=(None, sh.named(mesh, cspecs)),
+        )
+        args = (pshapes, batch_shapes)
+    else:  # decode
+        step = build_serve_step(cfg)
+        cshapes = batch_shapes["cache"]
+        cspecs = sh.cache_spec_tree(cfg, mesh, cshapes)
+        tok = batch_shapes["tokens"]
+        tspec = sh.batch_spec_tree(cfg, mesh, {"tokens": tok})["tokens"]
+        jitted = jax.jit(
+            step,
+            in_shardings=(sh.named(mesh, pspecs), sh.named(mesh, cspecs),
+                          sh.named(mesh, tspec),
+                          sh.named(mesh, jax.sharding.PartitionSpec())),
+            out_shardings=(None, sh.named(mesh, cspecs)),
+            donate_argnums=(1,),     # KV/SSM cache updated in place
+        )
+        args = (pshapes, cshapes, tok, batch_shapes["pos"])
+
+    with mesh:
+        lowered = jitted.lower(*args)
+    return lowered
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: str | None = "experiments/dryrun",
+             verbose: bool = True) -> dict:
+    cfg = ARCHS[arch_id]
+    shape = SHAPES[shape_name]
+    ok, reason = registry.supports_shape(cfg, shape)
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    rec: dict = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name}
+    if not ok:
+        rec["status"] = "SKIP"
+        rec["reason"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered = lower_cell(cfg, shape, mesh)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    from repro.launch.hlo_analysis import HloAnalyzer
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    analysis = HloAnalyzer(hlo, n_dev).analyze(top_k=6)
+
+    rec.update({
+        "status": "OK",
+        "devices": n_dev,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        # raw XLA cost analysis (scan bodies counted ONCE — see
+        # EXPERIMENTS.md §Roofline-methodology; kept for reference)
+        "flops_per_device": float(cost.get("flops", -1.0)),
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", -1.0)),
+        "collective_bytes_per_device": coll,
+        # trip-count-corrected HLO analysis (authoritative)
+        "hlo_analysis": {
+            "dot_flops": analysis["dot_flops"],
+            "elem_flops": analysis["elem_flops"],
+            "bytes": analysis["bytes"],
+            "coll_bytes": analysis["coll_bytes"],
+            "coll_bytes_total": analysis["coll_bytes_total"],
+            "wire_bytes_total": analysis["wire_bytes_total"],
+            "while_trips": analysis["while_trips"][:16],
+        },
+        "memory_analysis": {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        },
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+    })
+    if verbose:
+        print(f"[{arch_id} x {shape_name} x {mesh_name}] OK "
+              f"compile={rec['compile_s']}s "
+              f"flops/dev={rec['flops_per_device']:.3e} "
+              f"coll B/dev={coll['total']:.3e}")
+        print("  memory_analysis:", rec["memory_analysis"])
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch_id.replace('.', '_')}__{shape_name}__{mesh_name}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                try:
+                    rec = run_cell(a, s, mp, args.out)
+                    if rec["status"] == "SKIP":
+                        print(f"[{a} x {s}] SKIP: {rec['reason']}")
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    failures.append((a, s, mp, repr(e)))
+                    print(f"[{a} x {s} x mp={mp}] FAIL: {e}",
+                          file=sys.stderr)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    print("\nAll dry-run cells passed.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,631 @@
+"""HLO cost analyzer: FLOPs / HBM bytes / collective bytes from compiled HLO.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis visits every
+computation ONCE, so a ``lax.scan`` over L layers (or T timesteps) reports
+1/L of the real cost, and any collective inside the loop body is counted
+once.  All production models here scan over depth (and Mamba scans over
+time), so raw cost_analysis under-counts by 26-64x and an unroll-and-
+extrapolate workaround is unstable (the SPMD partitioner picks different
+strategies at different depths — EXPERIMENTS.md §Roofline-methodology).
+
+This module parses ``compiled.as_text()`` (post-optimization, post-SPMD,
+per-device HLO) and walks the call graph bottom-up:
+
+  * ``while`` bodies/conditions are multiplied by the loop trip count,
+    recovered from the loop-condition comparison constant (jax scans and
+    fori_loops always lower to ``lt(counter, N)``);
+  * ``fusion`` contributes its boundary bytes (operands + outputs — the
+    internals stay in registers/VMEM) but its *internal* dot/elementwise
+    FLOPs are recursed;
+  * dots count 2*numel(out)*K MXU FLOPs; elementwise/reduce ops count
+    numel(out) VPU FLOPs;
+  * collectives are sized per wire: all-gather/reduce-scatter move
+    (g-1)/g of the full buffer across a group of g devices, all-reduce
+    2*(g-1)/g, collective-permute 1x output (group sizes parsed from
+    ``replica_groups``, both explicit and iota forms);
+  * dynamic-update-slice at computation top level is modeled in-place
+    (bytes = 2x update size, not 2x buffer size) — matching TPU DMA
+    behaviour for KV-cache writes.
+
+Outputs both raw sums and per-op top-k breakdowns (``top_dots``,
+``top_collectives``) that the §Perf hillclimb reads to find the dominant
+structures.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+# opcodes that move no data and do no math
+_FREE_OPS = frozenset({
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id",
+    "opt-barrier", "domain",
+})
+
+# ~1 VPU flop per output element
+_ELEMENTWISE_HINT = frozenset({
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "and", "or", "xor", "not", "negate", "abs", "exponential", "log",
+    "log-plus-one", "exponential-minus-one", "tanh", "logistic", "rsqrt",
+    "sqrt", "cbrt", "sine", "cosine", "tan", "atan2", "erf", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "sign", "compare",
+    "select", "clamp", "convert", "reduce", "reduce-window", "map",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder", "clz", "popcnt", "is-finite", "stochastic-convert",
+})
+
+
+# ---------------------------------------------------------------------------
+# shape parsing
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?")
+
+
+def _shape_bytes_numel(shape_str: str) -> tuple[int, int]:
+    """Total (bytes, numel) of a shape string; tuples are summed."""
+    total_b = 0
+    total_n = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_n += n
+        total_b += n * _DTYPE_BYTES[dt]
+    return total_b, total_n
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+# ---------------------------------------------------------------------------
+# HLO text parsing
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Instruction:
+    name: str
+    shape: str            # result shape string (may be a tuple)
+    opcode: str
+    operands: list[str]   # %names (shapes resolved via the computation)
+    attrs: str            # raw attribute tail
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: dict[str, Instruction] = field(default_factory=dict)
+    order: list[str] = field(default_factory=list)
+    is_entry: bool = False
+
+    def root(self) -> Instruction | None:
+        for i in self.instructions.values():
+            if i.is_root:
+                return i
+        return self.instructions[self.order[-1]] if self.order else None
+
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+
+
+def _parse_instr_line(line: str) -> tuple | None:
+    """Parse '  [ROOT ]%name = SHAPE opcode(...), attrs' -> fields.
+
+    SHAPE may be a tuple '(s32[], bf16[..]{..}, /*index=5*/f32[..])' whose
+    comments contain '=' — so we scan structurally instead of one regex.
+    """
+    s = line.strip()
+    is_root = s.startswith("ROOT ")
+    if is_root:
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq].strip()
+    rhs = s[eq + 3:].lstrip()
+    if rhs.startswith("("):           # tuple shape: find matching paren
+        depth = 0
+        for i, c in enumerate(rhs):
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    shape = rhs[: i + 1]
+                    rest = rhs[i + 1:].lstrip()
+                    break
+        else:
+            return None
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        shape = rhs[:sp]
+        rest = rhs[sp + 1:].lstrip()
+    m = re.match(r"([a-z][\w\-]*)\(", rest)
+    if not m:
+        return None
+    opcode = m.group(1)
+    return is_root, name, shape, opcode, rest[m.end():]
+
+
+def _split_operands(s: str) -> tuple[list[str], str]:
+    """Split 'op1, op2, ...), attr=...' into operand list + attr tail."""
+    depth = 0
+    out = []
+    cur = []
+    i = 0
+    while i < len(s):
+        c = s[i]
+        if c in "({[":
+            depth += 1
+            cur.append(c)
+        elif c in "}])":
+            if depth == 0 and c == ")":
+                out.append("".join(cur).strip())
+                return [o for o in out if o], s[i + 1:]
+            depth -= 1
+            cur.append(c)
+        elif c == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(c)
+        i += 1
+    out.append("".join(cur).strip())
+    return [o for o in out if o], ""
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(name=m.group(2), is_entry=bool(m.group(1)))
+            continue
+        stripped = line.strip()
+        if stripped == "}" or stripped.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parsed = _parse_instr_line(line)
+        if parsed is None:
+            continue
+        root, name, shape, opcode, rest = parsed
+        operands, attrs = _split_operands(rest)
+        cur.instructions[name] = Instruction(
+            name=name, shape=shape.strip(), opcode=opcode,
+            operands=operands, attrs=attrs, is_root=bool(root))
+        cur.order.append(name)
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _called_comps(instr: Instruction) -> list[str]:
+    """Computation names referenced by calls=/body=/condition=/branches/to_apply."""
+    names = []
+    for key in ("calls=", "body=", "to_apply="):
+        m = re.search(re.escape(key) + r"\{?%?([\w.\-]+)", instr.attrs)
+        if m:
+            names.append(m.group(1))
+    m = re.search(r"branch_computations=\{([^}]*)\}", instr.attrs)
+    if m:
+        names += [s.strip().lstrip("%") for s in m.group(1).split(",")]
+    return names
+
+
+def _condition_comp(instr: Instruction) -> str | None:
+    m = re.search(r"condition=%?([\w.\-]+)", instr.attrs)
+    return m.group(1) if m else None
+
+
+def _operand_shape(comp: Computation, ref: str) -> str | None:
+    name = ref.strip().lstrip("%")
+    # strip literal forms like 'constant(12)' or 'f32[2]{0} %x'
+    if " " in name:
+        name = name.split()[-1].lstrip("%")
+    ins = comp.instructions.get(name)
+    return ins.shape if ins else None
+
+
+def _group_size(attrs: str, shape: str, n_devices: int) -> int:
+    """Replica-group size from replica_groups (explicit or iota form)."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[", attrs)
+    if m:  # iota form [n_groups, group_size]
+        return max(int(m.group(2)), 1)
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", attrs)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
+    return n_devices
+
+
+# ---------------------------------------------------------------------------
+# cost walk
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Cost:
+    dot_flops: float = 0.0
+    elem_flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict[str, float] = field(default_factory=dict)   # raw buffer
+    wire_bytes: dict[str, float] = field(default_factory=dict)   # per-wire
+    top_dots: list = field(default_factory=list)          # (flops, desc, mult)
+    top_colls: list = field(default_factory=list)         # (bytes, desc, mult)
+    top_bytes: list = field(default_factory=list)         # (bytes, desc, mult)
+    while_trips: list = field(default_factory=list)       # (comp, trips)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.dot_flops += other.dot_flops * mult
+        self.elem_flops += other.elem_flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.wire_bytes.items():
+            self.wire_bytes[k] = self.wire_bytes.get(k, 0.0) + v * mult
+        self.top_dots += [(f * mult, d, m * mult) for f, d, m in other.top_dots]
+        self.top_colls += [(b * mult, d, m * mult) for b, d, m in other.top_colls]
+        self.top_bytes += [(b * mult, d, m * mult) for b, d, m in other.top_bytes]
+        self.while_trips += other.while_trips
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll_bytes.values())
+
+    @property
+    def wire_total(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+class HloAnalyzer:
+    def __init__(self, text: str, n_devices: int):
+        self.comps = parse_hlo(text)
+        self.n_devices = n_devices
+        self._memo: dict[str, Cost] = {}
+        entries = [c for c in self.comps.values() if c.is_entry]
+        if not entries:
+            raise ValueError("no ENTRY computation found in HLO text")
+        self.entry = entries[0]
+
+    # -- trip counts ---------------------------------------------------------
+    def _trip_count(self, cond_name: str | None,
+                    instr: Instruction | None = None) -> int:
+        """Preferred: XLA's own `backend_config={"known_trip_count":{"n":N}}`.
+        Fallback: jax loops lower to `lt(counter, N)` -> N = max s32 constant
+        in the condition computation (scanning fused compares too)."""
+        if instr is not None:
+            m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', instr.attrs)
+            if m:
+                return int(m.group(1))
+        if cond_name is None or cond_name not in self.comps:
+            return 1
+        best = 1
+
+        def scan_comp(cname: str, depth: int = 0):
+            nonlocal best
+            if depth > 3 or cname not in self.comps:
+                return
+            for ins in self.comps[cname].instructions.values():
+                if ins.opcode == "constant" and (
+                        ins.shape.startswith("s32") or
+                        ins.shape.startswith("u32") or
+                        ins.shape.startswith("s64")):
+                    m = re.match(r"([0-9]+)", ins.operands[0] if ins.operands
+                                 else "")
+                    if m:
+                        best = max(best, int(m.group(1)))
+                for callee in _called_comps(ins):
+                    scan_comp(callee, depth + 1)
+
+        scan_comp(cond_name)
+        return best
+
+    # -- per-instruction costs -------------------------------------------------
+    def _dot_flops(self, comp: Computation, ins: Instruction) -> float:
+        out_b, out_n = _shape_bytes_numel(ins.shape)
+        k = 1
+        m = re.search(r"lhs_contracting_dims=\{([^}]*)\}", ins.attrs)
+        lhs_shape = _operand_shape(comp, ins.operands[0]) if ins.operands \
+            else None
+        if m and lhs_shape:
+            dims = _shape_dims(lhs_shape)
+            for d in m.group(1).split(","):
+                d = d.strip()
+                if d and int(d) < len(dims):
+                    k *= dims[int(d)]
+        return 2.0 * out_n * k
+
+    def _conv_flops(self, comp: Computation, ins: Instruction) -> float:
+        out_b, out_n = _shape_bytes_numel(ins.shape)
+        lhs_shape = _operand_shape(comp, ins.operands[1]) if \
+            len(ins.operands) > 1 else None
+        kernel = np.prod(_shape_dims(lhs_shape)) if lhs_shape else 1
+        return 2.0 * out_n * float(kernel)
+
+    def _operand_bytes(self, comp: Computation, ins: Instruction) -> float:
+        total = 0.0
+        for ref in ins.operands:
+            s = _operand_shape(comp, ref)
+            if s:
+                total += _shape_bytes_numel(s)[0]
+        return total
+
+    def _fusion_bytes(self, comp: Computation, ins: Instruction) -> float:
+        """HBM traffic of a fusion = boundary operands + outputs, with two
+        slice-aware corrections (critical inside scans, where a fused
+        dynamic-slice would otherwise bill the FULL carried array per trip):
+
+          * a fusion parameter consumed ONLY by (dynamic-)slice ops reads
+            just the slice outputs, not the whole buffer;
+          * a fusion whose root is a dynamic-update-slice is in-place: it
+            writes the update size, and the aliased buffer parameter is not
+            re-read.
+        """
+        callee = None
+        for c in _called_comps(ins):
+            if c in self.comps:
+                callee = self.comps[c]
+                break
+        if callee is None:
+            return self._operand_bytes(comp, ins) + \
+                _shape_bytes_numel(ins.shape)[0]
+
+        # map parameter index -> bytes actually read
+        param_names: dict[int, str] = {}
+        for i2 in callee.instructions.values():
+            if i2.opcode == "parameter":
+                m = re.match(r"(\d+)", i2.operands[0] if i2.operands else "")
+                if m:
+                    param_names[int(m.group(1))] = i2.name
+
+        consumers: dict[str, list[Instruction]] = defaultdict(list)
+        for i2 in callee.instructions.values():
+            for ref in i2.operands:
+                nm = ref.strip().lstrip("%")
+                if " " in nm:
+                    nm = nm.split()[-1].lstrip("%")
+                consumers[nm].append(i2)
+
+        root = callee.root()
+        dus_buffer_param: str | None = None
+        out_bytes = _shape_bytes_numel(ins.shape)[0]
+        if root is not None and root.opcode == "dynamic-update-slice":
+            upd_shape = _operand_shape(callee, root.operands[1]) \
+                if len(root.operands) > 1 else None
+            if upd_shape:
+                out_bytes = 2.0 * _shape_bytes_numel(upd_shape)[0]
+            buf = root.operands[0].strip().lstrip("%")
+            if " " in buf:
+                buf = buf.split()[-1].lstrip("%")
+            dus_buffer_param = buf
+
+        total = out_bytes
+        for idx, ref in enumerate(ins.operands):
+            oshape = _operand_shape(comp, ref)
+            if not oshape:
+                continue
+            full = _shape_bytes_numel(oshape)[0]
+            pname = param_names.get(idx)
+            if pname is None:
+                total += full
+                continue
+            if pname == dus_buffer_param:
+                continue  # aliased in-place buffer
+            cons = consumers.get(pname, [])
+            if cons and all(c.opcode in ("dynamic-slice", "slice")
+                            for c in cons):
+                total += sum(_shape_bytes_numel(c.shape)[0] for c in cons)
+            else:
+                total += full
+        return total
+
+    # -- computation walk --------------------------------------------------------
+    def cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        cost = Cost()
+        if comp is None:
+            self._memo[comp_name] = cost
+            return cost
+        # memo placeholder to break accidental cycles
+        self._memo[comp_name] = cost
+        for name in comp.order:
+            ins = comp.instructions[name]
+            op = ins.opcode
+            if op in _FREE_OPS:
+                continue
+            out_bytes, out_numel = _shape_bytes_numel(ins.shape)
+
+            if op == "while":
+                trips = self._trip_count(_condition_comp(ins), ins)
+                for callee in _called_comps(ins):      # body (+ to_apply)
+                    cost.add(self.cost_of(callee), mult=trips)
+                cond = _condition_comp(ins)
+                if cond:
+                    cost.add(self.cost_of(cond), mult=trips)
+                cost.while_trips.append((comp_name + "/" + name, trips))
+                continue
+
+            if op == "conditional":
+                branches = _called_comps(ins)
+                if branches:
+                    worst = max((self.cost_of(b) for b in branches),
+                                key=lambda c: c.bytes + c.dot_flops)
+                    cost.add(worst)
+                continue
+
+            if op == "fusion":
+                fb = self._fusion_bytes(comp, ins)
+                cost.bytes += fb
+                if fb > (1 << 20):
+                    meta = re.search(r'op_name="([^"]*)"', ins.attrs)
+                    cost.top_bytes.append(
+                        (fb, f"fusion {ins.shape[:60]} "
+                             f"{(meta.group(1)[-70:] if meta else '')}", 1.0))
+                for callee in _called_comps(ins):
+                    inner = self.cost_of(callee)
+                    # fused internals: math counts, bytes stay on-chip
+                    cost.dot_flops += inner.dot_flops
+                    cost.elem_flops += inner.elem_flops
+                    cost.top_dots += inner.top_dots
+                continue
+
+            if op == "call":
+                for callee in _called_comps(ins):
+                    cost.add(self.cost_of(callee))
+                continue
+
+            if op in ("dot", "dot-general"):
+                f = self._dot_flops(comp, ins)
+                cost.dot_flops += f
+                db = self._operand_bytes(comp, ins) + out_bytes
+                cost.bytes += db
+                cost.top_dots.append((f, f"{ins.shape} {ins.attrs[:80]}", 1.0))
+                if db > (1 << 20):
+                    cost.top_bytes.append((db, f"dot {ins.shape[:60]}", 1.0))
+                continue
+
+            if op == "convolution":
+                cost.dot_flops += self._conv_flops(comp, ins)
+                cost.bytes += self._operand_bytes(comp, ins) + out_bytes
+                continue
+
+            is_coll = None
+            for c in COLLECTIVE_OPS:
+                if op == c or op == c + "-start":
+                    is_coll = c
+                    break
+            if is_coll:
+                g = _group_size(ins.attrs, ins.shape, self.n_devices)
+                in_bytes = self._operand_bytes(comp, ins)
+                buf = max(out_bytes, in_bytes)
+                if is_coll == "all-gather":
+                    wire = out_bytes * (g - 1) / g
+                elif is_coll == "reduce-scatter":
+                    wire = in_bytes * (g - 1) / g
+                elif is_coll == "all-reduce":
+                    wire = out_bytes * 2.0 * (g - 1) / g
+                elif is_coll in ("all-to-all", "ragged-all-to-all"):
+                    wire = out_bytes * (g - 1) / g
+                else:  # collective-permute / broadcast
+                    wire = out_bytes
+                cost.coll_bytes[is_coll] = \
+                    cost.coll_bytes.get(is_coll, 0.0) + buf
+                cost.wire_bytes[is_coll] = \
+                    cost.wire_bytes.get(is_coll, 0.0) + wire
+                cost.bytes += in_bytes + out_bytes
+                cost.top_colls.append(
+                    (wire, f"{is_coll} {ins.shape} g={g}", 1.0))
+                continue
+            if op.endswith("-done") or op.endswith("-update"):
+                continue  # async completion of a -start we already counted
+
+            if op == "dynamic-update-slice":
+                # in-place on TPU: traffic = 2x the update, not the buffer
+                upd = _operand_shape(comp, ins.operands[1]) \
+                    if len(ins.operands) > 1 else None
+                ub = _shape_bytes_numel(upd)[0] if upd else out_bytes
+                cost.bytes += 2.0 * ub
+                continue
+            if op == "dynamic-slice":
+                cost.bytes += 2.0 * out_bytes
+                continue
+            if op in ("gather", "scatter"):
+                cost.bytes += 2.0 * out_bytes + \
+                    self._operand_bytes(comp, ins) * 0.0
+                cost.elem_flops += out_numel
+                continue
+            if op in ("copy", "copy-start", "transpose", "reshape",
+                      "broadcast", "concatenate", "slice", "pad", "reverse",
+                      "reduce", "sort", "iota", "rng", "rng-bit-generator",
+                      "cholesky", "triangular-solve", "custom-call",
+                      "reduce-window", "select-and-scatter"):
+                cost.bytes += self._operand_bytes(comp, ins) + out_bytes
+                if op in ("reduce", "sort", "reduce-window"):
+                    cost.elem_flops += out_numel
+                continue
+            if op in _ELEMENTWISE_HINT:
+                cost.bytes += self._operand_bytes(comp, ins) + out_bytes
+                cost.elem_flops += out_numel
+                continue
+            # unknown op: be conservative, count the data movement
+            cost.bytes += self._operand_bytes(comp, ins) + out_bytes
+        self._memo[comp_name] = cost
+        return cost
+
+    def analyze(self, top_k: int = 12) -> dict:
+        c = self.cost_of(self.entry.name)
+        dots = sorted(c.top_dots, key=lambda t: -t[0])
+        merged: dict[str, list] = defaultdict(lambda: [0.0, 0.0])
+        for f, d, m in dots:
+            merged[d][0] += f
+            merged[d][1] += m
+        top_dots = sorted(((v[0], k, v[1]) for k, v in merged.items()),
+                          key=lambda t: -t[0])[:top_k]
+        colls: dict[str, list] = defaultdict(lambda: [0.0, 0.0])
+        for b, d, m in c.top_colls:
+            colls[d][0] += b
+            colls[d][1] += m
+        top_colls = sorted(((v[0], k, v[1]) for k, v in colls.items()),
+                           key=lambda t: -t[0])[:top_k]
+        byt: dict[str, list] = defaultdict(lambda: [0.0, 0.0])
+        for b, d, m in c.top_bytes:
+            byt[d][0] += b
+            byt[d][1] += m
+        top_bytes = sorted(((v[0], k, v[1]) for k, v in byt.items()),
+                           key=lambda t: -t[0])[:top_k]
+        return {
+            "dot_flops": c.dot_flops,
+            "elem_flops": c.elem_flops,
+            "flops": c.dot_flops + c.elem_flops,
+            "bytes": c.bytes,
+            "coll_bytes": dict(c.coll_bytes),
+            "coll_bytes_total": c.coll_total,
+            "wire_bytes": dict(c.wire_bytes),
+            "wire_bytes_total": c.wire_total,
+            "top_dots": [
+                {"flops": f, "desc": d, "count": m} for f, d, m in top_dots],
+            "top_collectives": [
+                {"wire_bytes": b, "desc": d, "count": m}
+                for b, d, m in top_colls],
+            "top_bytes": [
+                {"bytes": b, "desc": d, "count": m}
+                for b, d, m in top_bytes],
+            "while_trips": c.while_trips[:64],
+        }
+
+
+def analyze_compiled(compiled, n_devices: int, top_k: int = 12) -> dict:
+    """Analyze a jax compiled executable (per-device costs)."""
+    return HloAnalyzer(compiled.as_text(), n_devices).analyze(top_k)

@@ -1,0 +1,26 @@
+"""Production mesh definitions (deliverable e).
+
+A function, not a module-level constant, so importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips over ("data", "model").
+    Multi-pod: 2x16x16 = 512 chips over ("pod", "data", "model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes that carry the batch dimension."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_smoke_mesh():
+    """1-device mesh for CPU smoke tests (same axis names as single-pod)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

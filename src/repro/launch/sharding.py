@@ -1,0 +1,219 @@
+"""Sharding rule engine: param-path + shape -> PartitionSpec.
+
+Rules are name-based with divisibility fallback: an axis is assigned only if
+the dimension divides the mesh axis size, otherwise that dimension is
+replicated.  This is what lets one ruleset cover all 10 archs (gemma3's 4
+heads and qwen2-vl's 28 heads silently fall back to replicated attention
+heads while their FFNs stay tensor-parallel).
+
+Conventions (DESIGN.md §5):
+  * batch dims -> ("pod","data") (= all data axes)
+  * TP ("model"): ffn hidden, attention heads, vocab
+  * FSDP (cfg.fsdp): weight input-dim additionally sharded over "data"
+  * MoE: expert dim over cfg.expert_axis; per-expert ffn over "model" when the
+    expert axis is "data" (llama4 2-D expert sharding)
+  * KV caches: batch over data axes; kv-heads over "model" if divisible, else
+    the *sequence* dim over "model" (sequence-parallel decode attention)
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _fits(mesh: Mesh, axis: str, dim: int) -> bool:
+    return axis in mesh.axis_names and dim % _axis_size(mesh, axis) == 0
+
+
+class RuleEngine:
+    def __init__(self, cfg: ArchConfig, mesh: Mesh):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    # -- helpers -------------------------------------------------------------
+    def m(self, dim: int) -> str | None:
+        return "model" if _fits(self.mesh, "model", dim) else None
+
+    def d(self, dim: int):
+        """FSDP axes (only when cfg.fsdp): ZeRO-3 over ALL data axes —
+        on the multipod mesh the pod axis shards weights/optimizer state
+        too (llama4's 2.4 TB of state needs all 512 ways)."""
+        if not self.cfg.fsdp:
+            return None
+        total = int(np.prod([_axis_size(self.mesh, a) for a in self.dp]))
+        if dim % total == 0:
+            return self.dp
+        return "data" if _fits(self.mesh, "data", dim) else None
+
+    def dp_axes(self, dim: int):
+        total = int(np.prod([_axis_size(self.mesh, a) for a in self.dp]))
+        return self.dp if dim % total == 0 else None
+
+    def expert(self, dim: int) -> str | None:
+        ax = self.cfg.expert_axis
+        return ax if _fits(self.mesh, ax, dim) else None
+
+    # -- parameter specs -----------------------------------------------------
+    def param_spec(self, path: str, shape: tuple[int, ...]) -> P:
+        name = path.rsplit("[", 1)[-1].strip("']\"")
+        r = len(shape)
+
+        def pad(spec: tuple, rank: int) -> P:
+            """left-pad with None to full rank (leading stacked layer dims)."""
+            return P(*((None,) * (rank - len(spec)) + spec))
+
+        if name == "tok":  # [V, D]
+            return P(self.m(shape[0]), self.d(shape[1]))
+        if name == "w" and "head" in path:  # [D, V]
+            return P(self.d(shape[0]), self.m(shape[1]))
+        if name == "wq":  # [..., D, H, hd]
+            return pad((self.d(shape[-3]), self.m(shape[-2]), None), r)
+        if name in ("wk", "wv"):  # [..., D, KV, hd]
+            return pad((self.d(shape[-3]), self.m(shape[-2]), None), r)
+        if name == "wo":  # [..., H, hd, D]
+            return pad((self.m(shape[-3]), None, self.d(shape[-1])), r)
+        if name in ("bq", "bk", "bv"):  # [..., H, hd]
+            return pad((self.m(shape[-2]), None), r)
+        if "moe" in path and name in ("w_gate", "w_up"):  # [..., E, D, F]
+            return pad((self.expert(shape[-3]), None,
+                        self.m(shape[-1]) if self.cfg.expert_axis != "model"
+                        else None), r)
+        if "moe" in path and name == "w_down":  # [..., E, F, D]
+            return pad((self.expert(shape[-3]),
+                        self.m(shape[-2]) if self.cfg.expert_axis != "model"
+                        else None, None), r)
+        if name == "router":  # [..., D, E]
+            return pad((None, None), r)
+        if name in ("w_gate", "w_up"):  # dense mlp [..., D, F]
+            return pad((self.d(shape[-2]), self.m(shape[-1])), r)
+        if name == "w_down":  # [..., F, D]
+            return pad((self.m(shape[-2]), self.d(shape[-1])), r)
+        if name == "w_out" and "mamba" in path:  # [..., di, D]
+            return pad((self.m(shape[-2]), self.d(shape[-1])), r)
+        if name in ("w_x_in", "w_z_in", "w_z", "w_x"):  # [..., D, di]
+            return pad((self.d(shape[-2]), self.m(shape[-1])), r)
+        if name in ("w_b", "w_c", "w_dt_in") and self.cfg.mamba_version == 1:
+            # mamba1: [..., di, small] — contract over sharded di
+            return pad((self.m(shape[-2]), None), r)
+        if name == "w_dt" and "mamba" in path and r >= 2:
+            # mamba1 [..., R, di] -> di over model; mamba2 [..., D, nh]
+            return pad((None, self.m(shape[-1])), r) \
+                if self.cfg.mamba_version == 1 else pad((None, None), r)
+        if name in ("conv_w", "conv_x_w", "conv_b_w", "conv_c_w"):
+            return pad((None, self.m(shape[-1])), r)
+        if name in ("conv_b", "conv_x_b", "b_dt", "d_skip"):
+            return pad((self.m(shape[-1]),), r)
+        if name == "a_log" and r >= 2 and shape[-1] > 1:  # [..., di, N]
+            return pad((self.m(shape[-2]), None), r)
+        return P(*((None,) * r))
+
+    # -- batch / cache specs ---------------------------------------------------
+    def batch_spec(self, name: str, shape: tuple[int, ...]) -> P:
+        if name == "positions":  # [3, B, S]
+            return P(None, self.dp_axes(shape[1]), None)
+        if name == "pos":
+            return P()
+        b_axes = self.dp_axes(shape[0])
+        return P(*((b_axes,) + (None,) * (len(shape) - 1)))
+
+    def kv_cache_spec(self, shape: tuple[int, ...]) -> P:
+        """[U, B, KV, S, hd]: batch over data axes; kv over model when
+        divisible else sequence-parallel over model."""
+        u, b, kv, s, hd = shape
+        b_axes = self.dp_axes(b)
+        if _fits(self.mesh, "model", kv):
+            return P(None, b_axes, "model", None, None)
+        if _fits(self.mesh, "model", s):
+            return P(None, b_axes, None, "model", None)
+        return P(None, b_axes, None, None, None)
+
+    def ssm_cache_spec(self, path: str, shape: tuple[int, ...]) -> P:
+        """Mamba caches: batch over data axes; channel/head dim over model.
+
+        Trailing layouts (possibly with leading stacked layer/group dims):
+          conv  [..., B, W-1, C]       -> (dp(B), None, model(C))
+          ssm1  [..., B, di, N]        -> (dp(B), model(di), None)
+          ssm2  [..., B, H, dh, N]     -> (dp(B), model(H), None, None)
+        """
+        if "conv" in path:
+            core = (self.dp_axes(shape[-3]), None, self.m(shape[-1]))
+        elif "ssm" in path:
+            # mamba2 state has 4 core dims [B,H,dh,N]; mamba1 has 3 [B,di,N]
+            core_rank = 4 if self.cfg.mamba_version == 2 else 3
+            if core_rank == 4 and len(shape) >= 4:
+                core = (self.dp_axes(shape[-4]), self.m(shape[-3]),
+                        None, None)
+            else:
+                core = (self.dp_axes(shape[-3]), self.m(shape[-2]), None)
+        else:
+            core = (None,) * len(shape)
+        lead = (None,) * (len(shape) - len(core))
+        return P(*(lead + core))
+
+    def cache_spec_tree(self, cache_shapes: Any) -> Any:
+        """Build the spec tree for a serving cache pytree."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+        specs = []
+        for kp, leaf in flat:
+            path = jax.tree_util.keystr(kp)
+            shape = leaf.shape
+            if ".k" in path or ".v" in path or "'k'" in path or "'v'" in path:
+                if len(shape) == 5:
+                    specs.append(self.kv_cache_spec(shape))
+                    continue
+            if "conv" in path or "ssm" in path:
+                specs.append(self.ssm_cache_spec(path, shape))
+                continue
+            specs.append(P(*((None,) * len(shape))))
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_spec_tree(cfg: ArchConfig, mesh: Mesh, param_shapes: Any) -> Any:
+    eng = RuleEngine(cfg, mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes)
+    specs = [eng.param_spec(jax.tree_util.keystr(kp), leaf.shape)
+             for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_spec_tree(cfg: ArchConfig, mesh: Mesh, batch_shapes: dict) -> dict:
+    eng = RuleEngine(cfg, mesh)
+    return {k: eng.batch_spec(k, v.shape) for k, v in batch_shapes.items()}
+
+
+def cache_spec_tree(cfg: ArchConfig, mesh: Mesh, cache_shapes: Any) -> Any:
+    return RuleEngine(cfg, mesh).cache_spec_tree(cache_shapes)
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def validate_specs(shape_tree: Any, spec_tree: Any, mesh: Mesh) -> list[str]:
+    """Returns a list of (path, error) strings for non-divisible assignments."""
+    errs = []
+    flat_s, _ = jax.tree_util.tree_flatten_with_path(shape_tree)
+    flat_p = jax.tree.leaves(spec_tree,
+                             is_leaf=lambda x: isinstance(x, P))
+    for (kp, leaf), spec in zip(flat_s, flat_p):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = int(np.prod([mesh.shape[a] for a in axes]))
+            if dim % n:
+                errs.append(f"{jax.tree_util.keystr(kp)}: {dim} % {n} != 0 "
+                            f"({spec})")
+    return errs

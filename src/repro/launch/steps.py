@@ -1,0 +1,104 @@
+"""Step functions lowered by the launcher / dry-run.
+
+  train_step   : loss + grad + clip + AdamW update (train_4k)
+  prefill_step : no-grad forward building the KV cache (prefill_32k)
+  serve_step   : one-token decode against a seq_len cache (decode_*/long_*)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import registry
+from repro.optim import (
+    AdamWState,
+    apply_updates,
+    clip_by_global_norm,
+    cosine_schedule,
+    init_state,
+)
+
+
+def _microbatches(batch: dict, k: int) -> dict:
+    """Split a global batch into k microbatches along the batch dim
+    (dim 1 for M-RoPE 'positions' [3, B, S], dim 0 otherwise)."""
+    out = {}
+    for name, x in batch.items():
+        ax = 1 if name == "positions" else 0
+        b = x.shape[ax]
+        shp = x.shape[:ax] + (k, b // k) + x.shape[ax + 1:]
+        out[name] = jnp.moveaxis(x.reshape(shp), ax, 0)
+    return out
+
+
+def build_train_step(cfg: ArchConfig, *, peak_lr: float = 3e-4,
+                     warmup: int = 2000, total_steps: int = 100_000,
+                     max_grad_norm: float = 1.0,
+                     grad_accum: int | None = None):
+    """grad_accum > 1 scans over microbatches accumulating f32 gradients:
+    peak activation memory drops ~1/k (the dry-run HBM-fit lever for the
+    deep/wide trains — EXPERIMENTS.md §Dry-run memory) at identical math
+    (mean token loss over equal microbatches)."""
+    k = grad_accum if grad_accum is not None else cfg.grad_accum
+
+    def grads_of(params, b):
+        return jax.value_and_grad(
+            lambda p: registry.loss_fn(cfg, p, b), has_aux=True)(params)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        # static fallback: smoke batches smaller than k accumulate nothing
+        kk = k if k > 1 and batch["tokens"].shape[0] % k == 0 and \
+            batch["tokens"].shape[0] >= k else 1
+        if kk > 1:
+            micro = _microbatches(batch, kk)
+
+            def acc(carry, mb):
+                g_sum, loss_sum = carry
+                (loss, metrics), g = grads_of(params, mb)
+                g_sum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_sum, g)
+                return (g_sum, loss_sum + loss), metrics
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, loss_sum), metrics_all = jax.lax.scan(
+                acc, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: (g / kk), g_sum)
+            metrics = jax.tree.map(lambda m: m.mean(), metrics_all)
+        else:
+            (_, metrics), grads = grads_of(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = cosine_schedule(opt_state.step, peak_lr=peak_lr, warmup=warmup,
+                             total=total_steps)
+        params, opt_state = apply_updates(params, grads, opt_state, lr=lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        logits, cache = registry.prefill(cfg, params, batch)
+        return logits, cache
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ArchConfig):
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = registry.decode_step(cfg, params, cache, tokens,
+                                                 pos)
+        return logits, new_cache
+
+    return serve_step
+
+
+def opt_state_shapes(cfg: ArchConfig, param_shapes: Any):
+    mdt = jnp.dtype(cfg.moment_dtype)
+    return jax.eval_shape(
+        functools.partial(init_state, moment_dtype=mdt), param_shapes)

@@ -1,0 +1,260 @@
+"""Mamba1 (falcon-mamba-7b) and Mamba2 (zamba2) state-space blocks.
+
+Selective-scan implemented with `jax.lax.scan` over time carrying the SSM
+state — compile cost is O(1) in sequence length and decode is the same body
+with S=1, which is what makes long_500k tractable for the SSM/hybrid archs
+(DESIGN.md §4).
+
+Projections are stored as separate per-stream weights (w_x, w_z, w_b, w_c,
+w_dt) rather than one packed matrix: depthwise convolution and matmuls are
+per-channel/per-column independent, so this is mathematically identical to
+the packed layout while giving every tensor a clean TP/FSDP PartitionSpec
+(no shard-crossing slices; see launch/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.activations import BATCH, MODEL, constrain
+
+
+class MambaCache(NamedTuple):
+    """Mamba1: conv history over the x stream + diagonal SSM state."""
+    conv: jax.Array   # [B, W-1, d_inner]
+    ssm: jax.Array    # [B, d_inner, d_state] fp32
+
+
+class Mamba2Cache(NamedTuple):
+    conv_x: jax.Array  # [B, W-1, d_inner]
+    conv_b: jax.Array  # [B, W-1, G*N]
+    conv_c: jax.Array  # [B, W-1, G*N]
+    ssm: jax.Array     # [B, H, Dh, N] fp32
+
+
+def _causal_conv(w, b, x, conv_state):
+    """Depthwise causal conv.  x: [B,S,C], w: [W,C], conv_state: [B,W-1,C].
+    Returns (y, new_state)."""
+    wlen = w.shape[0]
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(wlen))
+    new_state = xp[:, x.shape[1]:, :]
+    return y + b, new_state
+
+
+
+
+def _chunked_ssm_scan(step_fn, h0, xs, chunk: int = 128):
+    """Time scan as a scan-of-scans with jax.checkpoint on the chunk body
+    (§Dry-run memory fix).  A flat scan's backward saves the [B, di, N]
+    state EVERY step (34 GB/layer at train_4k); checkpointing chunk
+    boundaries saves S/chunk states and recomputes within a chunk — the
+    standard linear-attention/SSM memory-for-recompute trade.
+
+    xs: tuple of [S, ...] arrays; returns (h_final, ys [S, ...])."""
+    s = xs[0].shape[0]
+    n = s // chunk
+    rem = s - n * chunk
+
+    def chunk_body(h, xs_c):
+        return jax.lax.scan(step_fn, h, xs_c)
+
+    if n > 0:
+        main = tuple(x[: n * chunk].reshape((n, chunk) + x.shape[1:])
+                     for x in xs)
+        h, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, main)
+        ys = jax.tree.map(
+            lambda y: y.reshape((n * chunk,) + y.shape[2:]), ys)
+    else:
+        h, ys = h0, None
+    if rem:
+        tail = tuple(x[n * chunk:] for x in xs)
+        h, ys_t = jax.lax.scan(step_fn, h, tail)
+        ys = ys_t if ys is None else jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), ys, ys_t)
+    return h, ys
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (selective scan, per-channel diagonal A)
+# ---------------------------------------------------------------------------
+
+def init_mamba1(d: int, *, d_state: int = 16, expand: int = 2,
+                conv_w: int = 4, dt_rank: int | None = None,
+                dtype=jnp.float32, key=None) -> dict:
+    di = expand * d
+    dt_rank = dt_rank or max(1, d // 16)
+    ks = jax.random.split(key, 7)
+    s = float(1.0 / np.sqrt(d))
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (di, 1))
+    return {
+        "w_x_in": jax.random.normal(ks[0], (d, di), dtype) * s,
+        "w_z_in": jax.random.normal(ks[1], (d, di), dtype) * s,
+        "conv_w": jax.random.normal(ks[2], (conv_w, di), dtype)
+        * float(1.0 / np.sqrt(conv_w)),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_dt_in": jax.random.normal(ks[3], (di, dt_rank), dtype)
+        * float(1.0 / np.sqrt(di)),
+        "w_b": jax.random.normal(ks[4], (di, d_state), dtype) * float(1.0 / np.sqrt(di)),
+        "w_c": jax.random.normal(ks[5], (di, d_state), dtype) * float(1.0 / np.sqrt(di)),
+        "w_dt": jax.random.normal(ks[6], (dt_rank, di), dtype)
+        * float(1.0 / np.sqrt(dt_rank)),
+        "b_dt": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": jax.random.normal(ks[0], (di, d), dtype) * float(1.0 / np.sqrt(di)),
+    }
+
+
+def mamba1(p, x, cache: MambaCache | None = None):
+    """x: [B, S, D] -> (y, new_cache)."""
+    b, s, d = x.shape
+    di = p["w_out"].shape[0]
+    d_state = p["a_log"].shape[1]
+
+    if cache is None:
+        cache = MambaCache(
+            conv=jnp.zeros((b, p["conv_w"].shape[0] - 1, di), x.dtype),
+            ssm=jnp.zeros((b, di, d_state), jnp.float32),
+        )
+
+    x = constrain(x, BATCH)
+    xi = constrain(x @ p["w_x_in"], BATCH, None, MODEL)
+    z = constrain(x @ p["w_z_in"], BATCH, None, MODEL)
+    xi, new_conv = _causal_conv(p["conv_w"], p["conv_b"], xi, cache.conv)
+    xi = jax.nn.silu(xi)
+
+    dt = jax.nn.softplus((xi @ p["w_dt_in"]) @ p["w_dt"] + p["b_dt"])
+    dt = constrain(dt, BATCH, None, MODEL)
+    bmat = xi @ p["w_b"]                                   # [B,S,N]
+    cmat = xi @ p["w_c"]                                   # [B,S,N]
+    a = -jnp.exp(p["a_log"])                               # [di,N]
+
+    # §Perf H8: da/dbx ([B,S,di,N] f32 — 137 GB/layer at train_4k) are NOT
+    # materialized; each scan step computes its [B,di,N] slice from the
+    # [B,di]-wide streams, so the scan streams O(B*S*di) instead of
+    # O(B*S*di*N) bytes.
+    def step(h, inp):
+        dt_t, xi_t, b_t, c_t = inp
+        da_t = jnp.exp(dt_t[..., None] * a)                # [B,di,N]
+        dbx_t = (dt_t * xi_t)[..., None] * b_t[:, None, :]
+        h = da_t * h + dbx_t                               # [B,di,N]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    hT, ys = _chunked_ssm_scan(
+        step, cache.ssm,
+        (dt.transpose(1, 0, 2).astype(jnp.float32),
+         xi.transpose(1, 0, 2).astype(jnp.float32),
+         bmat.transpose(1, 0, 2).astype(jnp.float32),
+         cmat.transpose(1, 0, 2).astype(jnp.float32)))
+    y = ys.transpose(1, 0, 2).astype(x.dtype)              # [B,S,di]
+    y = y + xi * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"], MambaCache(new_conv, hT)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD: scalar decay per head, multi-head state)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(d: int, *, d_state: int = 64, expand: int = 2,
+                head_dim: int = 64, conv_w: int = 4, n_groups: int = 1,
+                dtype=jnp.float32, key=None) -> dict:
+    di = expand * d
+    nh = di // head_dim
+    gn = n_groups * d_state
+    ks = jax.random.split(key, 8)
+    s = float(1.0 / np.sqrt(d))
+    return {
+        "w_z": jax.random.normal(ks[0], (d, di), dtype) * s,
+        "w_x": jax.random.normal(ks[1], (d, di), dtype) * s,
+        "w_b": jax.random.normal(ks[2], (d, gn), dtype) * s,
+        "w_c": jax.random.normal(ks[3], (d, gn), dtype) * s,
+        "w_dt": jax.random.normal(ks[4], (d, nh), dtype) * s,
+        "conv_x_w": jax.random.normal(ks[5], (conv_w, di), dtype)
+        * float(1.0 / np.sqrt(conv_w)),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_b_w": jax.random.normal(ks[6], (conv_w, gn), dtype)
+        * float(1.0 / np.sqrt(conv_w)),
+        "conv_b_b": jnp.zeros((gn,), dtype),
+        "conv_c_w": jax.random.normal(ks[7], (conv_w, gn), dtype)
+        * float(1.0 / np.sqrt(conv_w)),
+        "conv_c_b": jnp.zeros((gn,), dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -4.6, jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), dtype),
+        "w_out": jax.random.normal(ks[0], (di, d), dtype) * float(1.0 / np.sqrt(di)),
+    }
+
+
+def init_mamba2_cache(batch: int, di: int, gn: int, nh: int, head_dim: int,
+                      d_state: int, conv_w: int, dtype) -> Mamba2Cache:
+    return Mamba2Cache(
+        conv_x=jnp.zeros((batch, conv_w - 1, di), dtype),
+        conv_b=jnp.zeros((batch, conv_w - 1, gn), dtype),
+        conv_c=jnp.zeros((batch, conv_w - 1, gn), dtype),
+        ssm=jnp.zeros((batch, nh, head_dim, d_state), jnp.float32),
+    )
+
+
+def mamba2(p, x, cache: Mamba2Cache | None = None, *, head_dim: int = 64,
+           n_groups: int = 1):
+    from .common import rms_norm
+    b, s, d = x.shape
+    di = p["w_out"].shape[0]
+    nh = p["a_log"].shape[0]
+    gn = p["w_b"].shape[1]
+    d_state = gn // n_groups
+
+    if cache is None:
+        cache = init_mamba2_cache(b, di, gn, nh, head_dim, d_state,
+                                  p["conv_x_w"].shape[0], x.dtype)
+
+    x = constrain(x, BATCH)
+    z = constrain(x @ p["w_z"], BATCH, None, MODEL)
+    xi = constrain(x @ p["w_x"], BATCH, None, MODEL)
+    bmat = x @ p["w_b"]
+    cmat = x @ p["w_c"]
+    dt_in = x @ p["w_dt"]
+    xi, new_cx = _causal_conv(p["conv_x_w"], p["conv_x_b"], xi, cache.conv_x)
+    bmat, new_cb = _causal_conv(p["conv_b_w"], p["conv_b_b"], bmat,
+                                cache.conv_b)
+    cmat, new_cc = _causal_conv(p["conv_c_w"], p["conv_c_b"], cmat,
+                                cache.conv_c)
+    xi = jax.nn.silu(xi).reshape(b, s, nh, head_dim)
+    bmat = jax.nn.silu(bmat).reshape(b, s, n_groups, d_state)
+    cmat = jax.nn.silu(cmat).reshape(b, s, n_groups, d_state)
+    rep = nh // n_groups
+    bmat = jnp.repeat(bmat, rep, axis=2)                   # [B,S,H,N]
+    cmat = jnp.repeat(cmat, rep, axis=2)
+
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(p["a_log"])                               # [H]
+    da = jnp.exp(dt * a)                                   # [B,S,H]
+
+    # §Perf H8 (as in mamba1): the [B,S,H,Dh,N] dbx tensor is computed
+    # per-step inside the scan, never materialized.
+    def step(h, inp):
+        da_t, dtx_t, b_t, c_t = inp
+        dbx_t = dtx_t[..., None] * b_t[:, :, None, :]      # [B,H,Dh,N]
+        h = da_t[:, :, None, None] * h + dbx_t             # [B,H,Dh,N]
+        y = jnp.einsum("bhdn,bhn->bhd", h, c_t)
+        return h, y
+
+    dtx = dt[..., None] * xi.astype(jnp.float32)           # [B,S,H,Dh]
+    hT, ys = _chunked_ssm_scan(
+        step, cache.ssm,
+        (da.transpose(1, 0, 2), dtx.transpose(1, 0, 2, 3),
+         bmat.transpose(1, 0, 2, 3).astype(jnp.float32),
+         cmat.transpose(1, 0, 2, 3).astype(jnp.float32)))
+    y = ys.transpose(1, 0, 2, 3)                           # [B,S,H,Dh]
+    y = y + xi.astype(jnp.float32) * p["d_skip"][:, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(p["norm_scale"], y * jax.nn.silu(z))
+    return y @ p["w_out"], Mamba2Cache(new_cx, new_cb, new_cc, hT)

@@ -1,0 +1,73 @@
+"""Mixture-of-Experts FFN (GShard/Switch-style einsum dispatch).
+
+Compile-friendly and EP-shardable: the expert dimension of the stacked expert
+weights is sharded (llama4: experts over "data" x per-expert ffn over "model";
+olmoe: experts over "model").  Dispatch/combine are one-hot einsums so XLA
+inserts the all-to-alls implied by the shardings.
+
+This layer is also the paper's flagship integration point: expert weights are
+the *shared disaggregated pool* ("sharing of machine learning model weights
+(especially in expert models) across hosts", paper §1), and the serving path
+can route expert access through Space-Control's checked_gather (see
+repro.core.pool and examples/shared_pool_serving.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_moe(d: int, f: int, n_experts: int, dtype, key,
+             *, router_dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    s_in = float(1.0 / np.sqrt(d))
+    s_out = float(1.0 / np.sqrt(f))
+    return {
+        "router": jax.random.normal(ks[0], (d, n_experts), router_dtype) * s_in,
+        "w_gate": jax.random.normal(ks[1], (n_experts, d, f), dtype) * s_in,
+        "w_up": jax.random.normal(ks[2], (n_experts, d, f), dtype) * s_in,
+        "w_down": jax.random.normal(ks[3], (n_experts, f, d), dtype) * s_out,
+    }
+
+
+def moe_ffn(p, x, *, top_k: int, capacity_factor: float = 1.25):
+    """x: [B, S, D] -> [B, S, D].  Returns (y, aux_loss)."""
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(p["router"].dtype) @ p["router"])  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)      # [T, K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(np.ceil(t * capacity_factor * top_k / e))
+    cap = max(cap, 1)
+
+    # position of each (token, k) slot within its expert's buffer
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)       # [T, K, E]
+    flatoh = onehot.reshape(t * top_k, e)
+    pos = jnp.cumsum(flatoh, axis=0) * flatoh - 1               # [T*K, E]
+    pos = pos.reshape(t, top_k, e)
+    within = (pos < cap) & (onehot > 0)
+
+    # dispatch tensor [T, E, C] (bf16 one-hot matmuls drive the MXU)
+    poh = jax.nn.one_hot(pos, cap, dtype=x.dtype) * \
+        within[..., None].astype(x.dtype)                       # [T,K,E,C]
+    dispatch = poh.sum(axis=1)                                  # [T, E, C]
+    combine = (poh * gate_vals[..., None, None].astype(x.dtype)).sum(axis=1)
+
+    expert_in = jnp.einsum("tec,td->ecd", dispatch, xt)         # [E, C, D]
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"])
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])     # [E, C, D]
+    y = jnp.einsum("tec,ecd->td", combine, expert_out)
+
+    # load-balance aux loss (Switch): E * sum(frac_tokens * frac_probs)
+    frac_tok = onehot.sum(axis=(0, 1)).astype(jnp.float32) / (t * top_k)
+    frac_prob = probs.mean(axis=0).astype(jnp.float32)
+    aux = e * jnp.sum(frac_tok * frac_prob)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,2 @@
+from .lru import hit_curve, lru_hits, reuse_distances
+from .model import SimConfig, SimResult, binary_search_nodes, run_pair, simulate

@@ -1,0 +1,1 @@
+from . import encdec, hybrid, lm, registry, ssm

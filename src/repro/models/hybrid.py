@@ -1,0 +1,207 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one shared attention block applied
+every `shared_attn_every` SSM blocks (weights shared across applications;
+per-application LoRA omitted — DESIGN.md §4).
+
+Structured as G groups of (`shared_attn_every` mamba2 blocks + 1 shared-attn
+application) + a tail of leftover mamba2 blocks, so each application owns its
+own KV-cache slot while the weights are shared.
+
+Long-context: the SSM state carries unbounded context; the shared attention
+uses a sliding window (cfg.attn_window_long) when the cache capacity exceeds
+it — the standard hybrid long-context regime that makes long_500k tractable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.layers.attention import KVCache, attention, init_attention, init_kv_cache
+from repro.layers.common import (
+    cross_entropy,
+    embed,
+    init_embed,
+    init_head,
+    init_rms_norm,
+    init_swiglu,
+    rms_norm,
+    swiglu,
+    unembed,
+)
+from repro.layers.mamba import Mamba2Cache, init_mamba2, init_mamba2_cache, mamba2
+
+
+def group_layout(cfg: ArchConfig) -> tuple[int, int, int]:
+    """(n_groups, blocks_per_group, tail_blocks)."""
+    bpg = cfg.shared_attn_every
+    g = cfg.n_layers // bpg
+    return g, bpg, cfg.n_layers - g * bpg
+
+
+def _init_mamba_block(cfg: ArchConfig, key) -> dict:
+    return {
+        "ln": init_rms_norm(cfg.d_model, cfg.pdtype),
+        "mamba": init_mamba2(cfg.d_model, d_state=cfg.ssm_state,
+                             expand=cfg.ssm_expand,
+                             head_dim=cfg.ssm_head_dim, conv_w=cfg.ssm_conv,
+                             dtype=cfg.pdtype, key=key),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    g, bpg, tail = group_layout(cfg)
+    kg, kt, ka, ke, kh, km = jax.random.split(key, 6)
+    gkeys = jax.random.split(kg, g * bpg).reshape(g, bpg)
+    params = {
+        "embed": init_embed(cfg.vocab_padded, cfg.d_model, cfg.pdtype, ke),
+        "groups": jax.vmap(jax.vmap(lambda k: _init_mamba_block(cfg, k)))(
+            gkeys),
+        "shared_attn": {
+            "ln1": init_rms_norm(cfg.d_model, cfg.pdtype),
+            "attn": init_attention(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim, cfg.pdtype, ka),
+            "ln2": init_rms_norm(cfg.d_model, cfg.pdtype),
+            "mlp": init_swiglu(cfg.d_model, cfg.d_ff, cfg.pdtype, km),
+        },
+        "final_norm": init_rms_norm(cfg.d_model, cfg.pdtype),
+        "head": init_head(cfg.vocab_padded, cfg.d_model, cfg.pdtype, kh,
+                          tied=cfg.tie_embeddings),
+    }
+    if tail:
+        tkeys = jax.random.split(kt, tail)
+        params["tail"] = jax.vmap(lambda k: _init_mamba_block(cfg, k))(tkeys)
+    return params
+
+
+def _mamba_cache_unit(cfg: ArchConfig, batch: int, dtype) -> Mamba2Cache:
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.ssm_head_dim
+    return init_mamba2_cache(batch, di, cfg.ssm_state, nh, cfg.ssm_head_dim,
+                             cfg.ssm_state, cfg.ssm_conv, dtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, cap: int, dtype=jnp.bfloat16):
+    g, bpg, tail = group_layout(cfg)
+    mc = _mamba_cache_unit(cfg, batch, dtype)
+    # beyond 64k the shared-attn cache becomes a ring buffer of the sliding
+    # window; below that it holds the full context (decode_32k, prefill_32k)
+    attn_cap = cfg.attn_window_long if cap > 65536 else cap
+    cache = {
+        "groups": jax.tree.map(
+            lambda leaf: jnp.broadcast_to(leaf[None, None],
+                                          (g, bpg) + leaf.shape), mc),
+        "attn": jax.tree.map(
+            lambda leaf: jnp.broadcast_to(leaf[None], (g,) + leaf.shape),
+            init_kv_cache(batch, cfg.n_kv_heads, attn_cap, cfg.head_dim,
+                          dtype)),
+    }
+    if tail:
+        cache["tail"] = jax.tree.map(
+            lambda leaf: jnp.broadcast_to(leaf[None], (tail,) + leaf.shape),
+            mc)
+    return cache
+
+
+def _attn_window(cfg: ArchConfig, cap: int) -> int:
+    return cfg.attn_window_long if cap > cfg.attn_window_long else -1
+
+
+def _mamba_scan(cfg, blocks, x, caches):
+    def body(carry, xs):
+        bp, c = xs if caches is not None else (xs, None)
+        h = rms_norm(bp["ln"], carry)
+        y, new_c = mamba2(bp["mamba"], h, c, head_dim=cfg.ssm_head_dim)
+        return carry + y, new_c
+
+    from repro.layers.common import apply_remat
+    body = apply_remat(body, cfg.remat)
+    xs = blocks if caches is None else (blocks, caches)
+    return jax.lax.scan(body, x, xs, unroll=cfg.scan_unroll)
+
+
+def _apply_shared_attn(cfg, sp, x, positions, cache, cache_pos, window):
+    h = rms_norm(sp["ln1"], x)
+    att, new_cache = attention(sp["attn"], h, positions,
+                               theta=cfg.rope_theta, window=window,
+                               cache=cache, cache_pos=cache_pos)
+    x = x + att
+    h = rms_norm(sp["ln2"], x)
+    return x + swiglu(sp["mlp"], h), new_cache
+
+
+def _run(cfg: ArchConfig, params, x, positions, cache, cache_pos, window):
+    g, bpg, tail = group_layout(cfg)
+    sp = params["shared_attn"]
+
+    def group_body(carry, xs):
+        xc = carry
+        if cache is None:
+            gp = xs
+            mcache, acache = None, None
+        else:
+            gp, mcache, acache = xs
+        xc, new_mc = _mamba_scan(cfg, gp, xc, mcache)
+        xc, new_ac = _apply_shared_attn(cfg, sp, xc, positions, acache,
+                                        cache_pos, window)
+        new_c = None if cache is None else (new_mc, new_ac)
+        return xc, new_c
+
+    xs = params["groups"] if cache is None else \
+        (params["groups"], cache["groups"], cache["attn"])
+    x, ys = jax.lax.scan(group_body, x, xs, unroll=cfg.scan_unroll)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"groups": ys[0], "attn": ys[1]}
+    if tail:
+        tc = cache.get("tail") if cache is not None else None
+        x, new_tc = _mamba_scan(cfg, params["tail"], x, tc)
+        if cache is not None:
+            new_cache["tail"] = new_tc
+    return x, new_cache
+
+
+def forward(cfg: ArchConfig, params, tokens, **_):
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = embed(params["embed"], tokens).astype(cfg.pdtype)
+    x, _ = _run(cfg, params, x, positions, None, None, -1)
+    x = rms_norm(params["final_norm"], x)
+    logits = unembed(params["embed"], params["head"], x,
+                     tied=cfg.tie_embeddings)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    logits, _ = forward(cfg, params, batch["tokens"])
+    loss = cross_entropy(logits, batch["labels"])
+    return loss, {"loss": loss}
+
+
+def prefill(cfg: ArchConfig, params, tokens, cache_dtype=jnp.bfloat16,
+            cap: int | None = None, **_):
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = embed(params["embed"], tokens).astype(cfg.pdtype)
+    cache = init_cache(cfg, b, cap or s, cache_dtype)
+    x, new_cache = _run(cfg, params, x, positions, cache, None,
+                        _attn_window(cfg, s))
+    x = rms_norm(params["final_norm"], x[:, -1:])
+    logits = unembed(params["embed"], params["head"], x,
+                     tied=cfg.tie_embeddings)
+    return logits, new_cache
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    b, s = tokens.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    x = embed(params["embed"], tokens).astype(cfg.pdtype)
+    cap = cache["attn"].k.shape[3]
+    # cache write position wraps within the window buffer for long contexts
+    write_pos = jnp.where(jnp.int32(cap) > pos, pos, pos % jnp.int32(cap))
+    x, new_cache = _run(cfg, params, x, positions, cache, write_pos,
+                        -1)
+    x = rms_norm(params["final_norm"], x)
+    logits = unembed(params["embed"], params["head"], x,
+                     tied=cfg.tie_embeddings)
+    return logits, new_cache

@@ -1,0 +1,106 @@
+"""Attention-free Mamba1 LM (falcon-mamba-7b)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.layers.common import (
+    cross_entropy,
+    embed,
+    init_embed,
+    init_head,
+    init_rms_norm,
+    rms_norm,
+    unembed,
+)
+from repro.layers.mamba import MambaCache, init_mamba1, mamba1
+
+
+def init_block(cfg: ArchConfig, key) -> dict:
+    return {
+        "ln": init_rms_norm(cfg.d_model, cfg.pdtype),
+        "mamba": init_mamba1(cfg.d_model, d_state=cfg.ssm_state,
+                             expand=cfg.ssm_expand, conv_w=cfg.ssm_conv,
+                             dtype=cfg.pdtype, key=key),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    ku, ke, kh = jax.random.split(key, 3)
+    keys = jax.random.split(ku, cfg.n_layers)
+    return {
+        "embed": init_embed(cfg.vocab_padded, cfg.d_model, cfg.pdtype, ke),
+        "blocks": jax.vmap(lambda k: init_block(cfg, k))(keys),
+        "final_norm": init_rms_norm(cfg.d_model, cfg.pdtype),
+        "head": init_head(cfg.vocab_padded, cfg.d_model, cfg.pdtype, kh,
+                          tied=cfg.tie_embeddings),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, cap: int = 0,
+               dtype=jnp.bfloat16):
+    """SSM state cache (capacity-free — O(1) in context length)."""
+    di = cfg.ssm_expand * cfg.d_model
+    unit = MambaCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+        ssm=jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+    )
+    return jax.tree.map(
+        lambda leaf: jnp.broadcast_to(leaf[None],
+                                      (cfg.n_layers,) + leaf.shape), unit)
+
+
+def _run_blocks(cfg: ArchConfig, params, x, cache):
+    def body(carry, xs):
+        if cache is None:
+            bp = xs
+            c = None
+        else:
+            bp, c = xs
+        h = rms_norm(bp["ln"], carry)
+        y, new_c = mamba1(bp["mamba"], h, c)
+        return carry + y, new_c
+
+    from repro.layers.common import apply_remat
+    body = apply_remat(body, cfg.remat)
+    xs = params["blocks"] if cache is None else (params["blocks"], cache)
+    x, new_cache = jax.lax.scan(body, x, xs, unroll=cfg.scan_unroll)
+    return x, new_cache
+
+
+def forward(cfg: ArchConfig, params, tokens, **_):
+    x = embed(params["embed"], tokens).astype(cfg.pdtype)
+    x, _ = _run_blocks(cfg, params, x, None)
+    x = rms_norm(params["final_norm"], x)
+    logits = unembed(params["embed"], params["head"], x,
+                     tied=cfg.tie_embeddings)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    logits, _ = forward(cfg, params, batch["tokens"])
+    loss = cross_entropy(logits, batch["labels"])
+    return loss, {"loss": loss}
+
+
+def prefill(cfg: ArchConfig, params, tokens, cache_dtype=jnp.bfloat16, **_):
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens).astype(cfg.pdtype)
+    cache = init_cache(cfg, b, dtype=cache_dtype)
+    x, new_cache = _run_blocks(cfg, params, x, cache)
+    x = rms_norm(params["final_norm"], x[:, -1:])
+    logits = unembed(params["embed"], params["head"], x,
+                     tied=cfg.tie_embeddings)
+    return logits, new_cache
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    del pos  # SSM state carries position implicitly
+    x = embed(params["embed"], tokens).astype(cfg.pdtype)
+    x, new_cache = _run_blocks(cfg, params, x, cache)
+    x = rms_norm(params["final_norm"], x)
+    logits = unembed(params["embed"], params["head"], x,
+                     tied=cfg.tie_embeddings)
+    return logits, new_cache

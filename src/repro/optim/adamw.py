@@ -1,0 +1,109 @@
+"""AdamW with framework-grade features:
+
+  * moments in a configurable dtype (bf16 for llama4 to fit v5e HBM),
+  * global-norm gradient clipping,
+  * warmup + cosine schedule,
+  * optional int8 gradient compression with stochastic rounding (beyond-paper
+    distributed-optimization feature — halves gradient all-reduce bytes),
+  * ZeRO-style sharding falls out of the param shardings: moments inherit the
+    param PartitionSpecs (launch/sharding.py), so FSDP-sharded params imply
+    fully sharded optimizer state.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def init_state(params, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / max(warmup, 1)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                     (1 + jnp.cos(np.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def compress_int8(grads, key):
+    """Stochastic-rounding int8 quantization of gradients (per-leaf scale).
+    Used before the data-parallel all-reduce to cut collective bytes 4x
+    (vs f32) / 2x (vs bf16).  Returns (q_tree, scales_tree)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    qs, scales = [], []
+    for g, k in zip(leaves, keys):
+        g32 = g.astype(jnp.float32)
+        s = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        noise = jax.random.uniform(k, g.shape, jnp.float32, -0.5, 0.5)
+        q = jnp.clip(jnp.round(g32 / s + noise), -127, 127).astype(jnp.int8)
+        qs.append(q)
+        scales.append(s)
+    return jax.tree.unflatten(treedef, qs), jax.tree.unflatten(treedef, scales)
+
+
+def decompress_int8(q_tree, scales_tree, dtype=jnp.float32):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s,
+                        q_tree, scales_tree) if dtype == jnp.float32 else \
+        jax.tree.map(lambda q, s: (q.astype(jnp.float32) * s).astype(dtype),
+                     q_tree, scales_tree)
+
+
+def apply_updates(params, grads, state: AdamWState, *, lr,
+                  b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                  weight_decay: float = 0.1) -> tuple[Any, AdamWState]:
+    step = state.step + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mdt = mu.dtype
+        mu32 = mu.astype(jnp.float32) * b1 + g32 * (1 - b1)
+        nu32 = nu.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+        upd32 = (mu32 / bc1) / (jnp.sqrt(nu32 / bc2) + eps)
+        upd32 = upd32 + weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * upd32
+        return new_p.astype(p.dtype), mu32.astype(mdt), nu32.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, AdamWState(step, new_mu, new_nu)

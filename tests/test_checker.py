@@ -1,0 +1,123 @@
+"""Permission checker (paper §4.2.3): fault codes + oracle equivalence."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FAULT_NO_ABITS,
+    FAULT_NO_ENTRY,
+    FAULT_NONE,
+    FAULT_NOT_LOCAL,
+    FAULT_PERM,
+    HostTable,
+    PERM_R,
+    PERM_RW,
+    PERM_W,
+    check_access,
+    make_hwpid_local,
+    pack_ext_addr,
+    perm_words_for,
+)
+
+
+def _table(entries):
+    t = HostTable(capacity=256)
+    for start, n, grants in entries:
+        t.insert(start, n, perm_words_for(grants))
+    return t.to_device()
+
+
+def test_fault_priority_no_abits():
+    dev = _table([(0, 10, {1: PERM_RW})])
+    local = make_hwpid_local([1])
+    ext = pack_ext_addr(jnp.asarray([0]), jnp.asarray([5]))  # hwpid 0
+    r = check_access(dev, local, ext, jnp.asarray([False]))
+    assert not bool(r.allowed[0])
+    assert int(r.fault[0]) == FAULT_NO_ABITS
+
+
+def test_fault_not_local():
+    dev = _table([(0, 10, {2: PERM_RW})])
+    local = make_hwpid_local([1])          # 2 not trusted on this host
+    ext = pack_ext_addr(jnp.asarray([2]), jnp.asarray([5]))
+    r = check_access(dev, local, ext, jnp.asarray([False]))
+    assert int(r.fault[0]) == FAULT_NOT_LOCAL
+
+
+def test_fault_no_entry():
+    dev = _table([(100, 10, {1: PERM_RW})])
+    local = make_hwpid_local([1])
+    for page in (5, 99, 110, 5000):
+        ext = pack_ext_addr(jnp.asarray([1]), jnp.asarray([page]))
+        r = check_access(dev, local, ext, jnp.asarray([False]))
+        assert int(r.fault[0]) == FAULT_NO_ENTRY, page
+
+
+def test_fault_perm_rw_semantics():
+    dev = _table([(0, 10, {1: PERM_R, 2: PERM_W, 3: PERM_RW})])
+    local = make_hwpid_local([1, 2, 3])
+
+    def go(hwpid, write):
+        ext = pack_ext_addr(jnp.asarray([hwpid]), jnp.asarray([4]))
+        return check_access(dev, local, ext, jnp.asarray([write]))
+
+    assert bool(go(1, False).allowed[0])          # R reads
+    assert int(go(1, True).fault[0]) == FAULT_PERM  # R cannot write
+    assert int(go(2, False).fault[0]) == FAULT_PERM  # W cannot read
+    assert bool(go(2, True).allowed[0])
+    assert bool(go(3, False).allowed[0]) and bool(go(3, True).allowed[0])
+
+
+def test_allowed_has_no_fault():
+    dev = _table([(0, 64, {7: PERM_RW})])
+    local = make_hwpid_local([7])
+    pages = jnp.arange(64)
+    ext = pack_ext_addr(jnp.full((64,), 7), pages)
+    r = check_access(dev, local, ext, jnp.zeros((64,), bool))
+    assert bool(r.allowed.all())
+    assert int(r.fault.sum()) == FAULT_NONE
+    assert bool((r.entry_idx == 0).all())
+
+
+grant = st.tuples(st.integers(0, 2000), st.integers(1, 200),
+                  st.integers(1, 8), st.sampled_from([PERM_R, PERM_W, PERM_RW]))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(grant, min_size=1, max_size=10),
+       st.lists(st.tuples(st.integers(0, 8), st.integers(0, 2200),
+                          st.booleans()), min_size=1, max_size=32),
+       st.sets(st.integers(1, 8)))
+def test_checker_matches_naive_oracle(grants, accesses, local_set):
+    t = HostTable(capacity=1024)
+    oracle = {}
+    for start, n, hwpid, perm in grants:
+        t.insert(start, n, perm_words_for({hwpid: perm}))
+        for pg in range(start, start + n):
+            d = oracle.setdefault(pg, {})
+            d[hwpid] = d.get(hwpid, 0) | perm
+    dev = t.to_device()
+    local = make_hwpid_local(sorted(local_set))
+
+    hw = jnp.asarray([a[0] for a in accesses])
+    pg = jnp.asarray([a[1] for a in accesses])
+    wr = jnp.asarray([a[2] for a in accesses])
+    r = check_access(dev, local, pack_ext_addr(hw, pg), wr)
+
+    for i, (hwpid, page, write) in enumerate(accesses):
+        perm = oracle.get(page, {}).get(hwpid, 0)
+        need = PERM_W if write else PERM_R
+        expect = (hwpid > 0 and hwpid in local_set and (perm & need) == need)
+        assert bool(r.allowed[i]) == expect, (hwpid, page, write, perm)
+
+
+def test_batch_mixed_faults():
+    dev = _table([(10, 10, {1: PERM_R})])
+    local = make_hwpid_local([1])
+    hw = jnp.asarray([0, 1, 2, 1, 1])
+    pg = jnp.asarray([12, 12, 12, 50, 12])
+    wr = jnp.asarray([False, False, False, False, True])
+    r = check_access(dev, local, pack_ext_addr(hw, pg), wr)
+    faults = [int(f) for f in r.fault]
+    assert faults == [FAULT_NO_ABITS, FAULT_NONE, FAULT_NOT_LOCAL,
+                      FAULT_NO_ENTRY, FAULT_PERM]

@@ -1,0 +1,81 @@
+"""Flash-attention Pallas kernel vs ref.py oracle: shape/dtype/GQA/window
+sweeps in interpret mode (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _qkv(rng, b, h, hkv, sq, sk, dh, dtype):
+    q = jnp.asarray(rng.normal(size=(b, h, sq, dh)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, sk, dh)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, sk, dh)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("sq,sk,bq,bk", [
+    (128, 128, 128, 128),       # single block
+    (256, 256, 128, 128),       # multi block
+    (256, 384, 128, 128),       # rectangular
+    (200, 200, 128, 128),       # ragged (padding)
+    (256, 256, 64, 128),        # small q blocks
+])
+def test_flash_matches_ref_shapes(rng, sq, sk, bq, bk):
+    q, k, v = _qkv(rng, 2, 4, 4, sq, sk, 64, jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=True, block_q=bq,
+                                 block_k=bk, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("h,hkv", [(8, 2), (4, 1), (4, 4)])
+def test_flash_gqa(rng, h, hkv):
+    q, k, v = _qkv(rng, 1, h, hkv, 128, 128, 64, jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_non_causal(rng):
+    q, k, v = _qkv(rng, 1, 2, 2, 128, 256, 64, jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=False, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_sliding_window(rng):
+    from repro.layers.attention import _sdpa, causal_mask
+    sq = 256
+    q, k, v = _qkv(rng, 1, 2, 2, sq, sq, 64, jnp.float32)
+    for w in (64, 160):
+        got = flash_attention_pallas(q, k, v, causal=True, window=w,
+                                     interpret=True)
+        want = _sdpa(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                     v.transpose(0, 2, 1, 3),
+                     causal_mask(sq, sq, window=w)).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16(rng):
+    q, k, v = _qkv(rng, 1, 2, 2, 128, 128, 64, jnp.bfloat16)
+    got = flash_attention_pallas(q, k, v, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_dh128(rng):
+    q, k, v = _qkv(rng, 1, 2, 2, 128, 128, 128, jnp.float32)
+    got = flash_attention_pallas(q, k, v, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,103 @@
+"""AdamW + distributed-optimization features."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (
+    AdamWState,
+    apply_updates,
+    clip_by_global_norm,
+    compress_int8,
+    cosine_schedule,
+    decompress_int8,
+    global_norm,
+    init_state,
+)
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0]), "b": jnp.asarray([2.0])}
+    target = {"w": jnp.asarray([1.0, 1.0]), "b": jnp.asarray([0.0])}
+    state = init_state(params)
+
+    def loss(p):
+        return sum(jnp.sum((a - t) ** 2)
+                   for a, t in zip(jax.tree.leaves(p),
+                                   jax.tree.leaves(target)))
+
+    for _ in range(400):
+        g = jax.grad(loss)(params)
+        params, state = apply_updates(params, g, state, lr=0.05,
+                                      weight_decay=0.0)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_bf16_moments():
+    params = {"w": jnp.ones((8,), jnp.bfloat16)}
+    state = init_state(params, moment_dtype=jnp.bfloat16)
+    assert state.mu["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.full((8,), 0.1, jnp.bfloat16)}
+    params2, state2 = apply_updates(params, g, state, lr=1e-2)
+    assert state2.mu["w"].dtype == jnp.bfloat16
+    assert params2["w"].dtype == jnp.bfloat16
+    assert not np.allclose(np.asarray(params2["w"], np.float32),
+                           np.asarray(params["w"], np.float32))
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0), "b": jnp.full((9,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(np.sqrt(13 * 100.0), rel=1e-5)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+    # below threshold -> untouched
+    g2 = {"a": jnp.asarray([0.1])}
+    c2, _ = clip_by_global_norm(g2, 1.0)
+    np.testing.assert_allclose(np.asarray(c2["a"]), [0.1], rtol=1e-6)
+
+
+def test_cosine_schedule_shape():
+    peak, warm, total = 3e-4, 100, 1000
+    s = lambda t: float(cosine_schedule(jnp.asarray(t), peak_lr=peak,
+                                        warmup=warm, total=total))
+    assert s(0) == 0.0
+    assert s(50) == pytest.approx(peak / 2, rel=1e-5)
+    assert s(100) == pytest.approx(peak, rel=1e-2)
+    assert s(1000) == pytest.approx(peak * 0.1, rel=1e-2)  # min_ratio floor
+    assert s(550) < s(200)
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression (collective-byte reduction feature)
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(1024,)), jnp.float32)}
+    q, s = compress_int8(g, jax.random.key(0))
+    assert q["w"].dtype == jnp.int8
+    back = decompress_int8(q, s)
+    scale = float(s["w"])
+    err = np.abs(np.asarray(back["w"]) - np.asarray(g["w"]))
+    assert err.max() <= scale * 1.0 + 1e-7   # within one quantization step
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_int8_stochastic_rounding_unbiased(seed):
+    """E[decompress(compress(g))] == g: mean error over many keys ~ 0."""
+    g = {"w": jnp.full((256,), 0.31416, jnp.float32)}
+    outs = []
+    for i in range(24):
+        q, s = compress_int8(g, jax.random.key(seed + i))
+        outs.append(np.asarray(decompress_int8(q, s)["w"]))
+    mean = np.stack(outs).mean()
+    scale = float(s["w"])
+    assert abs(mean - 0.31416) < scale * 0.2  # bias << one step
+
+
+def test_int8_compression_ratio():
+    g = {"w": jnp.zeros((4096,), jnp.float32)}
+    q, s = compress_int8(g, jax.random.key(0))
+    assert q["w"].nbytes * 4 == g["w"].nbytes  # 4x fewer bytes on the wire

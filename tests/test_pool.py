@@ -1,0 +1,149 @@
+"""SharedTensorPool + checked_gather: the framework-level SDM egress point."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FAULT_NO_ENTRY,
+    FAULT_NONE,
+    FabricManager,
+    PERM_R,
+    PERM_RW,
+    Proposal,
+    SharedTensorPool,
+    checked_gather,
+    make_hwpid_local,
+)
+from repro.core.table import PAGE_BYTES
+
+
+def _setup(n_rows=64, row_dim=32):
+    pool = SharedTensorPool()
+    w = jnp.arange(n_rows * row_dim, dtype=jnp.float32).reshape(n_rows,
+                                                                row_dim)
+    region = pool.register("experts", w)
+    fm = FabricManager(sdm_pages=pool.total_pages + 8, table_capacity=256)
+    h0 = fm.enroll_host(0)
+    return pool, region, fm, h0
+
+
+def test_region_page_accounting():
+    pool = SharedTensorPool()
+    w = jnp.zeros((100, 128), jnp.float32)  # 100 rows x 512 B
+    r = pool.register("w", w)
+    assert r.bytes_per_row == 512
+    assert r.n_pages == -(-100 * 512 // PAGE_BYTES)
+    # 8 rows per 4 KiB page
+    np.testing.assert_array_equal(
+        np.asarray(r.pages_for_rows(jnp.asarray([0, 7, 8, 16]))),
+        [r.start_page, r.start_page, r.start_page + 1, r.start_page + 2])
+
+
+def test_duplicate_region_rejected():
+    pool = SharedTensorPool()
+    pool.register("a", jnp.zeros((4, 4)))
+    with pytest.raises(ValueError):
+        pool.register("a", jnp.zeros((4, 4)))
+
+
+def test_checked_gather_grants_and_denies():
+    pool, region, fm, h0 = _setup()
+    hwpid = h0.get_next_pid()
+    # grant only the FIRST page of the region
+    fm.propose(Proposal(0, hwpid, 0xA, region.start_page, 1, PERM_R))
+    table = fm.table.to_device()
+    local = make_hwpid_local([hwpid])
+
+    rows_per_page = PAGE_BYTES // region.bytes_per_row
+    ok_rows = jnp.asarray([0, 1, rows_per_page - 1])
+    bad_rows = jnp.asarray([rows_per_page, region.rows - 1])
+
+    r_ok = checked_gather(pool, "experts", ok_rows, hwpid=hwpid,
+                          table=table, hwpid_local=local)
+    assert bool(r_ok.check.allowed.all())
+    np.testing.assert_array_equal(
+        np.asarray(r_ok.data),
+        np.asarray(pool.tensor("experts"))[np.asarray(ok_rows)])
+
+    r_bad = checked_gather(pool, "experts", bad_rows, hwpid=hwpid,
+                           table=table, hwpid_local=local)
+    assert not bool(r_bad.check.allowed.any())
+    assert np.all(np.asarray(r_bad.data) == 0.0)   # denied rows zero-filled
+    assert np.all(np.asarray(r_bad.check.fault) == FAULT_NO_ENTRY)
+
+
+def test_checked_gather_write_permission():
+    pool, region, fm, h0 = _setup()
+    hwpid = h0.get_next_pid()
+    fm.propose(Proposal(0, hwpid, 0xA, region.start_page, region.n_pages,
+                        PERM_R))
+    table = fm.table.to_device()
+    local = make_hwpid_local([hwpid])
+    r = checked_gather(pool, "experts", jnp.asarray([0]), hwpid=hwpid,
+                       table=table, hwpid_local=local, is_write=True)
+    assert not bool(r.check.allowed[0])  # R grant cannot write
+
+
+def test_cross_tenant_isolation():
+    """Tenant A reads its own expert rows; tenant B's gather of A's rows is
+    zero-filled — the paper's MoE-expert-sharing integration."""
+    pool, region, fm, h0 = _setup(n_rows=64)
+    h1 = fm.enroll_host(1)
+    a = h0.get_next_pid()
+    b = h1.get_next_pid()
+    half = region.n_pages // 2
+    fm.propose(Proposal(0, a, 1, region.start_page, half, PERM_RW))
+    fm.propose(Proposal(1, b, 2, region.start_page + half,
+                        region.n_pages - half, PERM_RW))
+    table = fm.table.to_device()
+
+    rows_a = jnp.arange(4)                       # in A's half
+    rows_b = jnp.asarray([region.rows - 1])      # in B's half
+    ra = checked_gather(pool, "experts", rows_a, hwpid=a, table=table,
+                        hwpid_local=make_hwpid_local([a]))
+    assert bool(ra.check.allowed.all())
+    # A cannot read B's half
+    steal = checked_gather(pool, "experts", rows_b, hwpid=a, table=table,
+                           hwpid_local=make_hwpid_local([a]))
+    assert not bool(steal.check.allowed.any())
+    assert np.all(np.asarray(steal.data) == 0.0)
+    # B reads its own half
+    rb = checked_gather(pool, "experts", rows_b, hwpid=b, table=table,
+                        hwpid_local=make_hwpid_local([b]))
+    assert bool(rb.check.allowed.all())
+
+
+def test_revocation_applies_to_pool():
+    pool, region, fm, h0 = _setup()
+    hwpid = h0.get_next_pid()
+    fm.propose(Proposal(0, hwpid, 1, region.start_page, region.n_pages,
+                        PERM_RW))
+    table = fm.table.to_device()
+    local = make_hwpid_local([hwpid])
+    r = checked_gather(pool, "experts", jnp.asarray([3]), hwpid=hwpid,
+                       table=table, hwpid_local=local)
+    assert bool(r.check.allowed[0])
+    fm.revoke_hwpid(hwpid)
+    table2 = fm.table.to_device()
+    r2 = checked_gather(pool, "experts", jnp.asarray([3]), hwpid=hwpid,
+                        table=table2, hwpid_local=local)
+    assert not bool(r2.check.allowed[0])
+
+
+def test_checked_gather_jit_compatible():
+    pool, region, fm, h0 = _setup()
+    hwpid = h0.get_next_pid()
+    fm.propose(Proposal(0, hwpid, 1, region.start_page, region.n_pages,
+                        PERM_RW))
+    table = fm.table.to_device()
+    local = make_hwpid_local([hwpid])
+
+    @jax.jit
+    def f(rows):
+        return checked_gather(pool, "experts", rows, hwpid=hwpid,
+                              table=table, hwpid_local=local).data
+
+    out = f(jnp.asarray([1, 2, 3]))
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(pool.tensor("experts"))[1:4])

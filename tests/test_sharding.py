@@ -1,0 +1,109 @@
+"""Sharding rule engine: every (arch x shape) produces divisible specs on
+the production meshes (AbstractMesh -> no 512-device requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch import sharding as sh
+from repro.models import registry
+
+POD = AbstractMesh((16, 16), ("data", "model"))
+MULTIPOD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+ARCH_IDS = list(ARCHS)
+
+
+@pytest.mark.parametrize("mesh", [POD, MULTIPOD], ids=["pod", "multipod"])
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_param_specs_divisible(arch_id, mesh):
+    cfg = ARCHS[arch_id]
+    shapes = registry.param_shapes(cfg)
+    specs = sh.param_spec_tree(cfg, mesh, shapes)
+    errs = sh.validate_specs(shapes, specs, mesh)
+    assert errs == [], errs[:5]
+
+
+@pytest.mark.parametrize("mesh", [POD, MULTIPOD], ids=["pod", "multipod"])
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_batch_and_cache_specs_divisible(arch_id, shape_name, mesh):
+    cfg = ARCHS[arch_id]
+    shape = SHAPES[shape_name]
+    ok, _ = registry.supports_shape(cfg, shape)
+    if not ok:
+        pytest.skip("shape unsupported for this arch")
+    batch = registry.input_specs(cfg, shape)
+    if shape.kind == "decode":
+        cspecs = sh.cache_spec_tree(cfg, mesh, batch["cache"])
+        errs = sh.validate_specs(batch["cache"], cspecs, mesh)
+        assert errs == [], errs[:5]
+        tspec = sh.batch_spec_tree(cfg, mesh, {"tokens": batch["tokens"]})
+        errs = sh.validate_specs({"tokens": batch["tokens"]}, tspec, mesh)
+        assert errs == [], errs
+    else:
+        specs = sh.batch_spec_tree(cfg, mesh, batch)
+        errs = sh.validate_specs(batch, specs, mesh)
+        assert errs == [], errs[:5]
+
+
+def test_tp_sharding_assigned_where_divisible():
+    """qwen3 FFN hidden (9728) divides 16 -> model axis assigned; gemma3's 4
+    attention heads don't divide 16 -> heads replicated but FFN still TP."""
+    cfg = ARCHS["qwen3-4b"]
+    eng = sh.RuleEngine(cfg, POD)
+    spec = eng.param_spec("['units']['mlp']['w_gate']", (36, 2560, 9728))
+    assert spec[-1] == "model"
+    cfg_g = ARCHS["gemma3-1b"]
+    eng_g = sh.RuleEngine(cfg_g, POD)
+    wq = eng_g.param_spec("['units']['attn']['wq']", (26, 1152, 4, 288))
+    assert wq[-2] is None           # 4 heads % 16 != 0 -> replicated
+    ffn = eng_g.param_spec("['units']['mlp']['w_gate']", (26, 1152, 6912))
+    assert ffn[-1] == "model"       # 6912 % 16 == 0
+
+
+def test_fsdp_shards_weight_input_dim():
+    cfg = ARCHS["qwen3-4b"]   # fsdp=True
+    eng = sh.RuleEngine(cfg, POD)
+    spec = eng.param_spec("['units']['mlp']['w_gate']", (36, 2560, 9728))
+    assert spec[-2] == "data"
+
+
+def test_vocab_padding_makes_embeddings_shardable():
+    for arch_id in ARCH_IDS:
+        cfg = ARCHS[arch_id]
+        assert cfg.vocab_padded % 256 == 0
+        assert cfg.vocab_padded >= cfg.vocab
+
+
+def test_batch_spec_uses_all_data_axes():
+    cfg = ARCHS["qwen1.5-0.5b"]
+    eng = sh.RuleEngine(cfg, MULTIPOD)
+    spec = eng.batch_spec("tokens", (256, 4096))
+    assert spec[0] == ("pod", "data")
+
+
+def test_kv_cache_sequence_parallel_fallback():
+    """glm4 kv=2 heads can't shard over model=16 -> sequence dim takes the
+    model axis (sequence-parallel decode)."""
+    cfg = ARCHS["glm4-9b"]
+    eng = sh.RuleEngine(cfg, POD)
+    spec = eng.kv_cache_spec((40, 128, 2, 32768, 128))
+    assert spec[2] is None and spec[3] == "model"
+
+
+def test_moe_expert_axis():
+    cfg = ARCHS["olmoe-1b-7b"]
+    eng = sh.RuleEngine(cfg, POD)
+    spec = eng.param_spec("['units']['moe']['w_gate']", (16, 64, 2048, 1024))
+    assert spec[1] == cfg.expert_axis
+
+
+def test_named_sharding_construction():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tree = {"a": P(None), "b": {"c": P("data", None)}}
+    named = sh.named(mesh, tree)
+    assert all(isinstance(x, jax.sharding.NamedSharding)
+               for x in jax.tree.leaves(named))

@@ -1,0 +1,220 @@
+"""SPACE + Fabric Manager workflow (paper §4.1, Fig. 2) and the §5.1
+security analysis scenarios as executable tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FabricManager,
+    LruCache,
+    PERM_R,
+    PERM_RW,
+    Proposal,
+    RING_KERNEL,
+    RING_USER,
+    SpaceEngine,
+    check_access,
+    hmac_label,
+    make_hwpid_local,
+    pack_ext_addr,
+)
+
+
+def make_system(n_hosts=2, sdm_pages=1 << 16):
+    fm = FabricManager(sdm_pages=sdm_pages, table_capacity=4096)
+    hosts = [fm.enroll_host(i) for i in range(n_hosts)]
+    return fm, hosts
+
+
+# ---------------------------------------------------------------------------
+# process-creation workflow (Fig. 2)
+# ---------------------------------------------------------------------------
+
+def test_creation_workflow_happy_path():
+    fm, (h0, h1) = make_system()
+    hwpid = h0.get_next_pid()
+    base_p = 0xDEAD000
+    label = fm.propose(Proposal(0, hwpid, base_p, 0, 256, PERM_RW))
+    assert label is not None
+    assert h0.verify_lexp(hwpid, base_p, fm.k_fm, 0, 256)
+    # SPACE validates the context at a context switch from user-space
+    h0.context_switch(core=0, hwpid=hwpid, base_p=base_p)
+    assert h0.arm_label(core=0, ring=RING_USER)
+    assert h0.current_hwpid(0) == hwpid
+
+
+def test_fm_rejects_bad_requests():
+    fm, (h0, _) = make_system()
+    assert fm.propose(Proposal(99, 1, 0, 0, 1, PERM_R)) is None   # bad host
+    assert fm.propose(Proposal(0, 0, 0, 0, 1, PERM_R)) is None    # hwpid 0
+    assert fm.propose(Proposal(0, 1, 0, 0, 1 << 20, PERM_R)) is None  # range
+    assert any("REJECT" in line for line in fm.audit_log)
+
+
+def test_fm_policy_hook():
+    fm, (h0, _) = make_system()
+    fm.set_policy(lambda p: p.n_pages <= 10)
+    assert fm.propose(Proposal(0, 1, 0, 0, 10, PERM_R)) is not None
+    assert fm.propose(Proposal(0, 2, 0, 100, 11, PERM_R)) is None
+
+
+def test_hwpid_allocation_exhaustion_and_release():
+    fm, (h0, _) = make_system()
+    pids = [h0.get_next_pid() for _ in range(127)]
+    assert sorted(pids) == list(range(1, 128))
+    with pytest.raises(RuntimeError):
+        h0.get_next_pid()
+    h0.release_pid(pids[0])
+    assert h0.get_next_pid() == pids[0]
+
+
+def test_hwpid_global_union():
+    fm, (h0, h1) = make_system()
+    a = h0.get_next_pid()
+    b = h1.get_next_pid()
+    fm.propose(Proposal(0, a, 1, 0, 4, PERM_R))
+    fm.propose(Proposal(1, b, 2, 4, 4, PERM_R))
+    assert fm.hwpid_global() == {a, b}
+    fm.revoke_hwpid(a)
+    assert fm.hwpid_global() == {b}
+
+
+# ---------------------------------------------------------------------------
+# runtime protection (paper §4.1.2)
+# ---------------------------------------------------------------------------
+
+def test_kernel_cannot_arm_label():
+    """ARM_LABEL from ring != user is refused; the shadow register stays
+    unset (paper: 'the shadow register is automatically unset if the core's
+    protection ring is anything other than the user-space')."""
+    fm, (h0, _) = make_system()
+    hwpid = h0.get_next_pid()
+    fm.propose(Proposal(0, hwpid, 7, 0, 16, PERM_RW))
+    h0.context_switch(0, hwpid, 7)
+    assert not h0.arm_label(0, ring=RING_KERNEL)
+    assert h0.current_hwpid(0) == 0   # A-bits untagged -> checker will fault
+
+
+def test_context_switch_clears_validation():
+    fm, (h0, _) = make_system()
+    hwpid = h0.get_next_pid()
+    fm.propose(Proposal(0, hwpid, 7, 0, 16, PERM_RW))
+    h0.context_switch(0, hwpid, 7)
+    assert h0.arm_label(0, ring=RING_USER)
+    # another (malicious) process is switched in: validation must drop
+    h0.context_switch(0, hwpid=55, base_p=0xBAD)
+    assert h0.current_hwpid(0) == 0
+    assert not h0.arm_label(0, ring=RING_USER)  # no L_exp for (55, 0xBAD)
+
+
+def test_unregistered_context_fails_validation():
+    fm, (h0, _) = make_system()
+    h0.context_switch(0, hwpid=3, base_p=0x123)
+    assert not h0.arm_label(0, ring=RING_USER)
+
+
+def test_forged_base_p_fails():
+    """OS remaps page tables (different BASE_P) -> (hwpid, base_p) has no
+    installed L_exp -> context not validated (paper §5.1.2)."""
+    fm, (h0, _) = make_system()
+    hwpid = h0.get_next_pid()
+    fm.propose(Proposal(0, hwpid, 0x111, 0, 16, PERM_RW))
+    h0.context_switch(0, hwpid, 0x222)   # forged page-table root
+    assert not h0.arm_label(0, ring=RING_USER)
+
+
+def test_labels_are_unforgeable_without_keys():
+    """L_exp depends on K_FM: a label minted with any other key fails the
+    attestation recomputation."""
+    fm, (h0, _) = make_system()
+    hwpid = h0.get_next_pid()
+    fm.propose(Proposal(0, hwpid, 9, 0, 8, PERM_R))
+    assert h0.verify_lexp(hwpid, 9, fm.k_fm, 0, 8)
+    assert not h0.verify_lexp(hwpid, 9, b"attacker-key-000", 0, 8)
+    # and installing a forged label breaks verification
+    h0.install_lexp(hwpid, 9, label=12345, pages=(8, 8))
+    assert not h0.verify_lexp(hwpid, 9, fm.k_fm, 8, 8)
+
+
+def test_label_freshness_monotonic_counter():
+    """L_host is bound to the per-activation counter: two activations of the
+    same context yield different labels (replay protection, paper Eq. 2)."""
+    fm, (h0, _) = make_system()
+    hwpid = h0.get_next_pid()
+    fm.propose(Proposal(0, hwpid, 7, 0, 16, PERM_RW))
+    h0.context_switch(0, hwpid, 7)
+    h0.arm_label(0, ring=RING_USER)
+    l1 = h0.cores[0].label_register
+    h0.context_switch(0, hwpid, 7)
+    h0.arm_label(0, ring=RING_USER)
+    l2 = h0.cores[0].label_register
+    assert l1 is not None and l2 is not None and l1 != l2
+
+
+def test_per_host_keys_differ():
+    fm, (h0, h1) = make_system()
+    assert hmac_label(h0._k_host, 1, 2, 3) != hmac_label(h1._k_host, 1, 2, 3)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end enforcement: SPACE -> A-bits -> checker
+# ---------------------------------------------------------------------------
+
+def test_end_to_end_isolation_two_hosts():
+    """Paper Fig. 1: P1 on host0 granted; P2 on host1 NOT granted.  P2's
+    accesses fault even though its host shares the SDM."""
+    fm, (h0, h1) = make_system()
+    p1 = h0.get_next_pid()
+    fm.propose(Proposal(0, p1, 0xA, 0, 128, PERM_RW))
+    p2 = h1.get_next_pid()   # never granted
+
+    table = fm.table.to_device()
+    local0 = make_hwpid_local([p1])
+    local1 = make_hwpid_local([p2])
+
+    # trusted P1 on host0: validated, tagged, allowed
+    h0.context_switch(0, p1, 0xA)
+    assert h0.arm_label(0, ring=RING_USER)
+    tag = h0.current_hwpid(0)
+    ext = pack_ext_addr(jnp.full((4,), tag), jnp.asarray([0, 1, 64, 127]))
+    r = check_access(table, local0, ext, jnp.zeros((4,), bool))
+    assert bool(r.allowed.all())
+
+    # P2 on host1: not validated -> untagged -> FAULT_NO_ABITS
+    h1.context_switch(0, p2, 0xB)
+    assert not h1.arm_label(0, ring=RING_USER)
+    tag2 = h1.current_hwpid(0)
+    ext2 = pack_ext_addr(jnp.full((2,), tag2), jnp.asarray([0, 64]))
+    r2 = check_access(table, local1, ext2, jnp.zeros((2,), bool))
+    assert not bool(r2.allowed.any())
+
+
+def test_revocation_bisnp_invalidates_cache():
+    """Paper §4.1.3/§7.1.7: a committed update broadcasts a BISnp; cached
+    permission entries must be dropped."""
+    fm, (h0, _) = make_system()
+    cache = LruCache(2048)
+    invalidated = []
+    fm.on_bisnp(lambda ev: (cache.invalidate_all(),
+                            invalidated.append((ev.start_page, ev.n_pages))))
+    hwpid = h0.get_next_pid()
+    fm.propose(Proposal(0, hwpid, 1, 0, 64, PERM_RW))
+    cache.access(0)
+    cache.access(1)
+    assert cache.access(0)   # hit
+    fm.revoke_hwpid(hwpid)
+    assert invalidated
+    assert not cache.access(0)  # must MISS after the back-invalidate
+    # and the table no longer grants hwpid anything
+    table = fm.table.to_device()
+    ext = pack_ext_addr(jnp.asarray([hwpid]), jnp.asarray([5]))
+    r = check_access(table, make_hwpid_local([hwpid]), ext,
+                     jnp.asarray([False]))
+    assert not bool(r.allowed[0])
+
+
+def test_enroll_limits():
+    fm = FabricManager(sdm_pages=16, table_capacity=16)
+    fm.enroll_host(0)
+    with pytest.raises(ValueError):
+        fm.enroll_host(0)

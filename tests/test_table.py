@@ -1,0 +1,195 @@
+"""Permission table (paper §4.2.2): FM-side mutation invariants + lookups.
+
+Property tests assert the three table invariants after ANY insert/revoke
+sequence (paper Fig. 5: sorted entries, non-overlapping, no empty entries)
+and that the device-side binary search agrees with a naive oracle.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    HostTable,
+    PERM_R,
+    PERM_RW,
+    PERM_W,
+    binary_search,
+    extract_perm,
+    make_table,
+    pack_ext_addr,
+    perm_words_for,
+    unpack_ext_addr,
+)
+from repro.core.table import EMPTY_START, MAX_HWPID, PERM_WORDS
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# perm word packing
+# ---------------------------------------------------------------------------
+
+def test_perm_words_roundtrip():
+    words = perm_words_for({1: PERM_R, 5: PERM_W, 100: PERM_RW, 127: PERM_R})
+    w = jnp.asarray(words)[None, :]
+    assert int(extract_perm(w, jnp.asarray([1]))[0]) == PERM_R
+    assert int(extract_perm(w, jnp.asarray([5]))[0]) == PERM_W
+    assert int(extract_perm(w, jnp.asarray([100]))[0]) == PERM_RW
+    assert int(extract_perm(w, jnp.asarray([127]))[0]) == PERM_R
+    assert int(extract_perm(w, jnp.asarray([2]))[0]) == 0
+
+
+def test_perm_words_bounds():
+    with pytest.raises(ValueError):
+        perm_words_for({128: PERM_R})
+    with pytest.raises(ValueError):
+        perm_words_for({1: 4})
+
+
+@given(st.dictionaries(st.integers(0, MAX_HWPID), st.integers(0, 3),
+                       min_size=1, max_size=32))
+def test_perm_words_property(mapping):
+    words = perm_words_for(mapping)
+    w = jnp.asarray(words)[None, :]
+    for hwpid, p in mapping.items():
+        assert int(extract_perm(w, jnp.asarray([hwpid]))[0]) == p
+
+
+# ---------------------------------------------------------------------------
+# A-bit packing
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, MAX_HWPID), st.integers(0, (1 << 24) - 1))
+def test_ext_addr_roundtrip(hwpid, page):
+    ext = pack_ext_addr(hwpid, page)
+    h, p = unpack_ext_addr(ext)
+    assert int(h) == hwpid and int(p) == page
+
+
+# ---------------------------------------------------------------------------
+# HostTable invariants under random workloads (hypothesis)
+# ---------------------------------------------------------------------------
+
+insert_op = st.tuples(
+    st.integers(0, 4000),          # start page
+    st.integers(1, 500),           # n pages
+    st.integers(1, 16),            # hwpid
+    st.sampled_from([PERM_R, PERM_W, PERM_RW]))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(insert_op, min_size=1, max_size=24))
+def test_insert_invariants(ops):
+    t = HostTable(capacity=4096)
+    for start, n, hwpid, perm in ops:
+        t.insert(start, n, perm_words_for({hwpid: perm}))
+        t.check_invariants()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(insert_op, min_size=1, max_size=16),
+       st.lists(st.integers(1, 16), max_size=4))
+def test_insert_then_revoke_invariants(ops, revokes):
+    t = HostTable(capacity=4096)
+    for start, n, hwpid, perm in ops:
+        t.insert(start, n, perm_words_for({hwpid: perm}))
+    for h in revokes:
+        t.remove_hwpid(h)
+        t.check_invariants()
+        # revoked hwpid has no permissions anywhere
+        for i in range(t.n):
+            w = jnp.asarray(t.perms[i])[None, :]
+            assert int(extract_perm(w, jnp.asarray([h]))[0]) == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(insert_op, min_size=1, max_size=16),
+       st.integers(0, 4500))
+def test_lookup_matches_oracle(ops, probe_page):
+    """After arbitrary inserts, permission of (page, hwpid) equals a naive
+    'last grant wins OR-union' oracle."""
+    t = HostTable(capacity=4096)
+    # oracle: per-page per-hwpid 2-bit perms
+    oracle = {}
+    for start, n, hwpid, perm in ops:
+        t.insert(start, n, perm_words_for({hwpid: perm}))
+        for pg in range(start, start + n):
+            oracle[pg] = oracle.get(pg, {})
+            # FM grants union (OR) on overlap
+            oracle[pg][hwpid] = oracle[pg].get(hwpid, 0) | perm
+    dev = t.to_device()
+    idx, _ = binary_search(dev.starts, dev.n, jnp.asarray([probe_page]))
+    i = int(idx[0])
+    if probe_page in oracle:
+        assert i >= 0
+        s, sz = int(dev.starts[i]), int(dev.sizes[i])
+        assert s <= probe_page < s + sz
+        for hwpid, p in oracle[probe_page].items():
+            got = int(extract_perm(dev.perms[i][None, :],
+                                   jnp.asarray([hwpid]))[0])
+            assert got == p, (probe_page, hwpid, got, p)
+    else:
+        covered = i >= 0 and int(dev.starts[i]) <= probe_page < \
+            int(dev.starts[i]) + int(dev.sizes[i])
+        assert not covered
+
+
+def test_coalescing_merges_adjacent_identical():
+    t = HostTable(capacity=64)
+    w = perm_words_for({1: PERM_RW})
+    t.insert(0, 10, w)
+    t.insert(10, 10, w)
+    assert t.n == 1
+    assert int(t.starts[0]) == 0 and int(t.sizes[0]) == 20
+
+
+def test_overlap_splits_and_unions():
+    t = HostTable(capacity=64)
+    t.insert(0, 100, perm_words_for({1: PERM_R}))
+    t.insert(40, 20, perm_words_for({2: PERM_W}))
+    t.check_invariants()
+    # [0,40): hwpid1 R; [40,60): hwpid1 R + hwpid2 W; [60,100): hwpid1 R
+    assert t.n == 3
+    mid = jnp.asarray(t.perms[1])[None, :]
+    assert int(extract_perm(mid, jnp.asarray([1]))[0]) == PERM_R
+    assert int(extract_perm(mid, jnp.asarray([2]))[0]) == PERM_W
+
+
+def test_capacity_exceeded_raises():
+    t = HostTable(capacity=2)
+    t.insert(0, 1, perm_words_for({1: PERM_R}))
+    t.insert(10, 1, perm_words_for({1: PERM_R}))
+    with pytest.raises(RuntimeError):
+        t.insert(20, 1, perm_words_for({2: PERM_W}))
+
+
+def test_empty_tail_is_sentinel():
+    t = HostTable(capacity=8)
+    t.insert(5, 3, perm_words_for({1: PERM_R}))
+    dev = t.to_device()
+    assert int(dev.n) == 1
+    assert np.all(np.asarray(dev.starts[1:]) == EMPTY_START)
+
+
+# ---------------------------------------------------------------------------
+# device binary search
+# ---------------------------------------------------------------------------
+
+def test_binary_search_probe_counts_bounded():
+    starts = jnp.asarray(np.arange(0, 1024 * 4, 4), jnp.int32)
+    n = jnp.asarray(1024, jnp.int32)
+    pages = jnp.asarray(np.random.default_rng(0).integers(0, 4096, 256),
+                        jnp.int32)
+    idx, probes = binary_search(starts, n, pages)
+    assert int(probes.max()) <= int(np.ceil(np.log2(1024))) + 1
+    # every page >= 0 finds the floor entry
+    expect = np.searchsorted(np.asarray(starts), np.asarray(pages),
+                             side="right") - 1
+    np.testing.assert_array_equal(np.asarray(idx), expect)
+
+
+def test_binary_search_empty_table():
+    starts = jnp.full((16,), EMPTY_START, jnp.int32)
+    idx, probes = binary_search(starts, jnp.asarray(0), jnp.asarray([5]))
+    assert int(idx[0]) == -1

@@ -1,0 +1,142 @@
+"""GAPBS workload kernels + trace generators + crypto primitives."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.crypto import arx_mac32, derive_key, hmac_label
+from repro.workloads import gapbs
+from repro.workloads.graphs import CSRGraph, make_graph, to_csr
+
+
+@pytest.fixture(scope="module")
+def g():
+    return make_graph(scale=8, avg_degree=6, seed=1)
+
+
+def _tiny_graph():
+    #  0-1, 0-2, 1-2, 2-3   (one triangle 0-1-2)
+    edges = np.asarray([[0, 1], [0, 2], [1, 2], [2, 3]])
+    return to_csr(edges, 4, symmetrize=True)
+
+
+# ---------------------------------------------------------------------------
+# kernel correctness
+# ---------------------------------------------------------------------------
+
+def test_pagerank_sums_to_one(g):
+    pr = np.asarray(gapbs.pagerank(g, iters=20))
+    assert pr.shape == (g.n,)
+    assert pr.sum() == pytest.approx(1.0, rel=1e-3)
+    assert (pr > 0).all()
+
+
+def test_pagerank_favors_high_degree():
+    gg = _tiny_graph()
+    pr = np.asarray(gapbs.pagerank(gg, iters=30))
+    assert pr[2] == max(pr)  # vertex 2 has the highest degree
+
+
+def test_bfs_distances_tiny():
+    gg = _tiny_graph()
+    dist = np.asarray(gapbs.bfs(gg, source=0))
+    np.testing.assert_array_equal(dist, [0, 1, 1, 2])
+
+
+def test_bfs_unreachable():
+    edges = np.asarray([[0, 1]])
+    gg = to_csr(edges, 3, symmetrize=True)
+    dist = np.asarray(gapbs.bfs(gg, source=0))
+    assert dist[2] < 0 or dist[2] >= 10 ** 6  # sentinel for unreachable
+
+
+def test_connected_components(g):
+    comp = np.asarray(gapbs.connected_components(g))
+    # same component -> connected via an edge => labels propagate
+    src = np.repeat(np.arange(g.n), g.degrees())
+    assert (comp[src] == comp[g.neighbors]).all()
+
+
+def test_triangle_count_tiny():
+    assert gapbs.triangle_count(_tiny_graph()) == 1
+
+
+def test_triangle_count_clique():
+    edges = np.asarray([[i, j] for i in range(5) for j in range(i + 1, 5)])
+    gg = to_csr(edges, 5, symmetrize=True)
+    assert gapbs.triangle_count(gg) == 10  # C(5,3)
+
+
+# ---------------------------------------------------------------------------
+# trace generators
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel", gapbs.KERNELS)
+def test_traces_well_formed(g, kernel):
+    tr = gapbs.TRACES[kernel](g, cap=50_000, seed=0)
+    assert len(tr.pages) == len(tr.is_write)
+    assert len(tr.pages) > 1000
+    assert tr.n_instructions > len(tr.pages)
+    assert tr.pages.min() >= 0
+    lay = gapbs.SDMLayout.for_graph(g)
+    assert tr.pages.max() < lay.total_pages * gapbs.PAGE
+
+
+def test_trace_locality_ordering():
+    """pr (streaming) must have better line locality than tc (scattered) —
+    the property the paper's Fig. 7/8 workload ordering rests on.  Needs a
+    graph larger than the probe cache to be meaningful."""
+    big = make_graph(scale=12, avg_degree=12, seed=2)
+
+    def miss_frac(tr, cache_lines=1024):
+        from repro.memsim.lru import reuse_distances
+        rd = reuse_distances(tr.pages // 64)
+        return float((rd >= cache_lines).mean())
+
+    pr = gapbs.trace_pr(big, cap=60_000, seed=0)
+    tc = gapbs.trace_tc(big, cap=60_000, seed=0)
+    assert miss_frac(pr) < miss_frac(tc)
+
+
+def test_trace_deterministic(g):
+    a = gapbs.trace_bfs(g, cap=10_000, seed=5)
+    b = gapbs.trace_bfs(g, cap=10_000, seed=5)
+    np.testing.assert_array_equal(a.pages, b.pages)
+
+
+# ---------------------------------------------------------------------------
+# crypto
+# ---------------------------------------------------------------------------
+
+def test_hmac_label_deterministic_and_keyed():
+    k1, k2 = b"k1" * 16, b"k2" * 16
+    assert hmac_label(k1, 1, 2, 3) == hmac_label(k1, 1, 2, 3)
+    assert hmac_label(k1, 1, 2, 3) != hmac_label(k2, 1, 2, 3)
+    assert hmac_label(k1, 1, 2, 3) != hmac_label(k1, 1, 2, 4)
+    assert hmac_label(k1, 1, 2, 3) != hmac_label(k1, 2, 1, 3)  # order matters
+    assert 0 <= hmac_label(k1, 7) < (1 << 64)
+
+
+def test_derive_key_distinct():
+    m = b"master"
+    assert derive_key(m, "K_host:0") != derive_key(m, "K_host:1")
+    assert len(derive_key(m, "x")) == 32
+
+
+def test_arx_mac32_avalanche():
+    """Single-bit input flip changes ~half the output bits."""
+    x0, x1 = arx_mac32(np.uint32(1), np.uint32(2),
+                       np.uint32(0x1234), np.uint32(0x5678))
+    y0, y1 = arx_mac32(np.uint32(1), np.uint32(2),
+                       np.uint32(0x1235), np.uint32(0x5678))
+    diff = bin(int(x0) ^ int(y0)).count("1") + \
+        bin(int(x1) ^ int(y1)).count("1")
+    assert 16 <= diff <= 48
+
+
+def test_arx_mac32_vectorized_matches_scalar():
+    msgs = np.arange(16, dtype=np.uint32)
+    v0, v1 = arx_mac32(np.uint32(5), np.uint32(6), msgs, msgs * 2)
+    for i in range(16):
+        s0, s1 = arx_mac32(np.uint32(5), np.uint32(6),
+                           np.uint32(i), np.uint32(2 * i))
+        assert int(v0[i]) == int(s0) and int(v1[i]) == int(s1)
