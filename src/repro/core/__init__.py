@@ -15,10 +15,14 @@ from .checker import (
     FAULT_NONE,
     FAULT_NOT_LOCAL,
     FAULT_PERM,
+    PERM_CACHE_BYTES,
     CheckResult,
+    PermCache,
     binary_search,
+    cached_check_access,
     check_access,
     make_hwpid_local,
+    make_perm_cache,
 )
 from .crypto import arx_mac32, arx_mac64, derive_key, hmac_label
 from .fm import BISnpEvent, FabricManager, Proposal
@@ -33,12 +37,14 @@ from .table import (
     PERM_R,
     PERM_RW,
     PERM_W,
+    SUMMARY_TILE,
     HostTable,
     PermissionTable,
     extract_perm,
     make_table,
     pack_ext_addr,
     perm_words_for,
+    tile_summary,
     unpack_ext_addr,
 )
 

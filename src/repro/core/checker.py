@@ -85,20 +85,83 @@ def check_access(
     """Vectorized permission check for a batch of tagged accesses."""
     hwpid, page = unpack_ext_addr(ext_addrs)
     is_write = jnp.asarray(is_write, bool)
+    # (2) sorted-table search; (1)+(3)+(4) shared with the cached path
+    idx, probes = binary_search(table.starts, table.n, page)
+    return _finalize(table, hwpid_local, hwpid, page, is_write, idx, probes)
 
-    # (1) A-bits present and locally trusted
+
+def make_hwpid_local(hwpids) -> jax.Array:
+    """Build the per-host trusted HWPID bit-vector (u32[4])."""
+    v = np.zeros((4,), np.uint32)
+    for h in hwpids:
+        v[h // 32] |= np.uint32(1) << np.uint32(h % 32)
+    return jnp.asarray(v)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized permission cache (paper §4.2.3: 16 KiB cache in the checker)
+# ---------------------------------------------------------------------------
+# The paper's checker hides table-walk latency behind a small SRAM cache of
+# recently matched entries.  `PermCache` is the batched jnp analogue: a
+# direct-mapped map page -> matched entry index, held as plain arrays so the
+# whole probe/refill runs inside jit.  On a probe hit the cached entry is
+# re-validated against the live table (so FM rewrites / revocations can never
+# produce a stale grant — a wrong cached index simply misses), and when EVERY
+# lane of a batch hits, the log2(N) binary search is skipped entirely via
+# `lax.cond` — the vectorized fast path for the repeated-page traffic the
+# paper's cache exploits.  The exact fully-associative LRU model lives in
+# `repro.core.cache.LruCache` / memsim; this cache trades associativity for a
+# branch-free vector probe.
+
+PERM_CACHE_BYTES = 16 * 1024    # paper default: 16 KiB
+CACHE_ENTRY_BYTES = 64          # one 64 B table entry per cache slot
+
+
+class PermCache(NamedTuple):
+    tag: jax.Array      # i32[n_sets] cached page address (-1 = invalid)
+    entry: jax.Array    # i32[n_sets] table entry index the page matched
+    hits: jax.Array     # i32[] cumulative probe hits
+    misses: jax.Array   # i32[] cumulative probe misses
+
+    @property
+    def n_sets(self) -> int:
+        return self.tag.shape[0]
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.n_sets * CACHE_ENTRY_BYTES
+
+    @property
+    def hit_rate(self) -> float:
+        t = int(self.hits) + int(self.misses)
+        return int(self.hits) / t if t else 0.0
+
+
+def make_perm_cache(capacity_bytes: int = PERM_CACHE_BYTES) -> PermCache:
+    if capacity_bytes % CACHE_ENTRY_BYTES:
+        raise ValueError("capacity must be a multiple of 64 B entries")
+    n_sets = capacity_bytes // CACHE_ENTRY_BYTES
+    if n_sets & (n_sets - 1):
+        raise ValueError("perm cache set count must be a power of two")
+    return PermCache(
+        tag=jnp.full((n_sets,), -1, jnp.int32),
+        entry=jnp.full((n_sets,), -1, jnp.int32),
+        hits=jnp.zeros((), jnp.int32),
+        misses=jnp.zeros((), jnp.int32),
+    )
+
+
+def _finalize(table, hwpid_local, hwpid, page, is_write, idx, probes):
+    """Steps 1+3+4 of the checker, shared by the cached and uncached paths."""
     has_abits = hwpid > 0
     word = hwpid_local[jnp.clip(hwpid // 32, 0, 3)]
     local_ok = ((word >> (hwpid % 32).astype(jnp.uint32)) & 1).astype(bool)
 
-    # (2) sorted-table search
-    idx, probes = binary_search(table.starts, table.n, page)
     safe_idx = jnp.clip(idx, 0, table.capacity - 1)
     s = table.starts[safe_idx]
     sz = table.sizes[safe_idx]
     in_range = (idx >= 0) & (page >= s) & (page < s + sz) & (s != EMPTY_START)
 
-    # (3) permission bits for this HWPID
     pw = table.perms[safe_idx]
     perm = extract_perm(pw, hwpid)
     need = jnp.where(is_write, jnp.uint32(2), jnp.uint32(1))
@@ -114,12 +177,71 @@ def check_access(
     return CheckResult(allowed, fault, jnp.where(in_range, idx, -1), probes)
 
 
-def make_hwpid_local(hwpids) -> jax.Array:
-    """Build the per-host trusted HWPID bit-vector (u32[4])."""
-    v = np.zeros((4,), np.uint32)
-    for h in hwpids:
-        v[h // 32] |= np.uint32(1) << np.uint32(h % 32)
-    return jnp.asarray(v)
+def cached_check_access(
+    table: PermissionTable,
+    hwpid_local: jax.Array,
+    ext_addrs: jax.Array,
+    is_write: jax.Array,
+    cache: PermCache,
+) -> tuple[CheckResult, PermCache]:
+    """`check_access` with the direct-mapped permission-cache fast path.
+
+    Semantically identical to `check_access` (same CheckResult fields except
+    `probes`, which is 0 on cache-hit lanes — the search was skipped);
+    additionally returns the updated cache.  Purely functional: thread the
+    returned cache into the next call.
+    """
+    hwpid, page = unpack_ext_addr(ext_addrs)
+    is_write = jnp.asarray(is_write, bool)
+    n_sets = cache.n_sets
+
+    # probe: direct-mapped on the low page bits, validated against the table
+    # (a stale mapping fails validation and degrades to a miss, never to a
+    # wrong verdict)
+    set_idx = page & (n_sets - 1)
+    ctag = cache.tag[set_idx]
+    cent = cache.entry[set_idx]
+    probe_ok = (ctag == page) & (cent >= 0)
+    safe_cent = jnp.clip(cent, 0, table.capacity - 1)
+    cs = table.starts[safe_cent]
+    csz = table.sizes[safe_cent]
+    hit = probe_ok & (page >= cs) & (page < cs + csz) & (cs != EMPTY_START)
+
+    # fast path: when the whole batch hits, skip the binary search entirely
+    def slow(_):
+        return binary_search(table.starts, table.n, page)
+
+    def fast(_):
+        return cent, jnp.zeros_like(page)
+
+    bs_idx, bs_probes = jax.lax.cond(jnp.all(hit), fast, slow, None)
+    idx = jnp.where(hit, cent, bs_idx)
+    probes = jnp.where(hit, 0, bs_probes)
+
+    result = _finalize(table, hwpid_local, hwpid, page, is_write, idx, probes)
+
+    # refill: install lanes that resolved to a live entry (duplicate sets in
+    # one batch: last lane wins, as in any single-ported SRAM fill).  An
+    # all-hit batch changes nothing, so the scatter is cond-skipped too.
+    def refill(_):
+        found = result.entry_idx >= 0
+        upd_set = jnp.where(found, set_idx, n_sets)  # n_sets = drop slot
+        tag1 = jnp.concatenate([cache.tag, jnp.full((1,), -1, jnp.int32)])
+        ent1 = jnp.concatenate([cache.entry, jnp.full((1,), -1, jnp.int32)])
+        return (tag1.at[upd_set].set(page)[:n_sets],
+                ent1.at[upd_set].set(result.entry_idx)[:n_sets])
+
+    new_tag, new_ent = jax.lax.cond(
+        jnp.all(hit), lambda _: (cache.tag, cache.entry), refill, None)
+    n_hits = jnp.sum(hit).astype(jnp.int32)
+    new_cache = PermCache(
+        tag=new_tag,
+        entry=new_ent,
+        hits=cache.hits + n_hits,
+        misses=cache.misses + (jnp.int32(page.size) - n_hits),
+    )
+    return result, new_cache
 
 
 check_access_jit = jax.jit(check_access)
+cached_check_access_jit = jax.jit(cached_check_access)

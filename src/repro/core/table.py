@@ -41,6 +41,10 @@ PERM_R = 1
 PERM_W = 2
 PERM_RW = 3
 
+SUMMARY_TILE = 1024      # entries summarized per tile; must equal the Pallas
+                         # kernel's ENTRY_TILE (asserted in kernels.permcheck)
+_NO_END = np.int32(np.iinfo(np.int32).min)   # "empty tile" max-end sentinel
+
 
 class PermissionTable(NamedTuple):
     starts: jax.Array   # i32[cap] sorted ascending, tail = EMPTY_START
@@ -56,6 +60,46 @@ class PermissionTable(NamedTuple):
     def nbytes_metadata(self) -> int:
         """Metadata bytes actually consumed (64 B per live entry)."""
         return int(self.n) * ENTRY_BYTES
+
+    def tile_summary(self, *, tile: int = SUMMARY_TILE,
+                     n_tiles: int | None = None):
+        """(tile_min, tile_max) over this device table — see `tile_summary`."""
+        return tile_summary(self.starts, self.starts + self.sizes,
+                            tile=tile, n_tiles=n_tiles)
+
+
+def tile_summary(starts, ends, *, tile: int = SUMMARY_TILE,
+                 n_tiles: int | None = None):
+    """Per-tile [min start, max end) summary for the two-level checker.
+
+    The sorted table is cut into tiles of ``tile`` consecutive entries; tile t
+    is summarized by ``tile_min[t] = min(starts)`` and ``tile_max[t] =
+    max(ends)`` over its live entries.  Because entries are sorted and
+    non-overlapping, a page can fall inside at most one tile's
+    ``[tile_min, tile_max)`` window, so a checker only has to evaluate the
+    1-2 candidate tiles the summary flags instead of the whole shard — the
+    software analogue of the paper's §4.2.3 cache skipping full table walks.
+
+    Padding / dead entries (``start == EMPTY_START``) contribute
+    ``tile_min = EMPTY_START`` and ``tile_max = INT32_MIN`` so an all-dead
+    tile matches no page.  Returns ``(tile_min i32[n_tiles],
+    tile_max i32[n_tiles])`` padded to ``n_tiles`` tiles (default: just
+    enough to cover ``len(starts)``).
+    """
+    s = jnp.asarray(starts, jnp.int32)
+    e = jnp.asarray(ends, jnp.int32)
+    n = s.shape[0]
+    if n_tiles is None:
+        n_tiles = max(1, -(-n // tile))
+    cap = n_tiles * tile
+    if cap < n:
+        raise ValueError(f"n_tiles={n_tiles} x tile={tile} < {n} entries")
+    sp = jnp.full((cap,), EMPTY_START, jnp.int32).at[:n].set(s)
+    ep = jnp.full((cap,), _NO_END, jnp.int32).at[:n].set(e)
+    ep = jnp.where(sp == EMPTY_START, _NO_END, ep)
+    tile_min = sp.reshape(n_tiles, tile).min(axis=1)
+    tile_max = ep.reshape(n_tiles, tile).max(axis=1)
+    return tile_min, tile_max
 
 
 def make_table(capacity: int) -> PermissionTable:
@@ -192,6 +236,14 @@ class HostTable:
             self.perms[i] = p
             self.meta[i] = m
         self.n = len(segs)
+
+    def tile_summary(self, *, tile: int = SUMMARY_TILE,
+                     n_tiles: int | None = None):
+        """Summary of the committed table, rebuilt by the FM after every
+        insert/revoke (the device-side checker consumes it read-only)."""
+        with np.errstate(over="ignore"):
+            ends = self.starts + self.sizes
+        return tile_summary(self.starts, ends, tile=tile, n_tiles=n_tiles)
 
     # -- export to device ----------------------------------------------------
     def to_device(self) -> PermissionTable:

@@ -1,27 +1,24 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-`use_pallas` selects the Pallas path (interpret=True on CPU; compiled on TPU);
-the default falls back to the pure-jnp reference (ref.py), which is what the
-dry-run lowers so the 512-device host meshes never see Pallas primitives.
+`use_pallas` selects the Pallas path (auto backend: compiled on TPU,
+interpret elsewhere — see ``repro.kernels.resolve_interpret``); the default
+falls back to the pure-jnp reference (ref.py), which is what the dry-run
+lowers so the 512-device host meshes never see Pallas primitives.
 """
 from __future__ import annotations
 
-import jax
-
 from . import ref
-from .memcrypt import memcrypt_pallas
+from .memcrypt import checked_memcrypt_pallas, memcrypt_pallas
 from .permcheck import MAX_ENTRIES, permcheck_pallas
-
-_ON_TPU = jax.default_backend() == "tpu"
 
 
 def permission_check(ext_addrs, starts, ends, permbits, *, hwpid: int,
-                     need: int, use_pallas: bool = False):
+                     need: int, use_pallas: bool = False,
+                     mode: str = "hier"):
     """(allowed bool[B], idx i32[B]) — see kernels/permcheck.py."""
     if use_pallas and starts.shape[0] <= MAX_ENTRIES:
         return permcheck_pallas(ext_addrs, starts, ends, permbits,
-                                hwpid=hwpid, need=need,
-                                interpret=not _ON_TPU)
+                                hwpid=hwpid, need=need, mode=mode)
     return ref.permcheck(ext_addrs, starts, ends, permbits,
                          hwpid=hwpid, need=need)
 
@@ -31,8 +28,27 @@ def memory_encrypt(data, *, key0: int, key1: int, base_word: int = 0,
     """Counter-mode line cipher; involutive (encrypt == decrypt)."""
     if use_pallas:
         return memcrypt_pallas(data, key0=key0, key1=key1,
-                               base_word=base_word, interpret=not _ON_TPU)
+                               base_word=base_word)
     return ref.memcrypt(data, key0, key1, base_word)
 
 
 memory_decrypt = memory_encrypt
+
+
+def checked_memory_decrypt(data, ext_addrs, starts, ends, permbits, *,
+                           hwpid: int, need: int, key0: int, key1: int,
+                           base_word: int = 0, use_pallas: bool = False):
+    """Fused egress: permission check + decrypt, one kernel launch.
+
+    (out u32[B], fault i32[B]) — denied lanes zeroed, FAULT_* codes emitted.
+    See kernels/memcrypt.py (`checked_memcrypt_pallas`) and the matching
+    oracle `ref.checked_memcrypt`.
+    """
+    if use_pallas and starts.shape[0] <= MAX_ENTRIES:
+        return checked_memcrypt_pallas(data, ext_addrs, starts, ends,
+                                       permbits, hwpid=hwpid, need=need,
+                                       key0=key0, key1=key1,
+                                       base_word=base_word)
+    return ref.checked_memcrypt(data, ext_addrs, starts, ends, permbits,
+                                hwpid=hwpid, need=need, key0=key0, key1=key1,
+                                base_word=base_word)

@@ -3,21 +3,37 @@
 TPU-native rethinking of the paper's binary-search checker (DESIGN.md §7):
 instead of log2(N) serialized DRAM probes per access (the CPU/CXL cost
 structure), the sorted table shard lives in VMEM and the VPU evaluates the
-range/permission predicate for an (8, 128) block of tagged addresses against a
-(8, 128) tile of entries per step.  VMEM residency plays the role of the
-paper's permission cache: the table is loaded from HBM once per grid row, not
-per access.
+range/permission predicate for an (8, 128) block of tagged addresses.  VMEM
+residency plays the role of the paper's permission cache: the table is loaded
+from HBM once per grid row, not per access.
+
+Two kernel variants share the wrapper:
+
+  mode="hier" (default) — two-level hierarchical search.  A precomputed
+    per-tile summary (min-start / max-end per ENTRY_TILE consecutive entries,
+    see ``repro.core.table.tile_summary``) is scanned first: a cheap
+    (8, 128, n_tiles) predicate finds each address's candidate tile, and the
+    expensive (8, 128, ENTRY_TILE) range/permission evaluation runs only for
+    tiles some lane actually needs (``lax.cond``-skipped otherwise).  Inner
+    work drops from O(N) to O(N/ENTRY_TILE + k·ENTRY_TILE) per block, where k
+    is the number of distinct candidate tiles — 1-2 for the locality-heavy
+    access patterns the paper's 16 KiB cache exploits.
+
+  mode="flat" — the original brute-force O(B·N) scan, kept as the baseline
+    for benchmarks/kernels_bench.py.
 
 Layout:
   addresses  i32[B]   -> grid-blocked (ADDR_BLOCK,) tiles, viewed (8, 128)
   starts/ends i32[N]  -> whole-shard VMEM resident (index_map -> 0)
   permbits   u32[N]   -> 2-bit field pre-extracted for the calling tenant
+  tile_min/max i32[n_tiles] -> whole-resident summary (hier mode only)
   outputs    allowed u32[B] (0/1), idx i32[B]
 
-N is the *per-shard* entry count (<= MAX_ENTRIES = 8192 = 96 KiB of VMEM for
-the three arrays); the global table is range-partitioned across the "model"
-mesh axis (see repro.launch.sharding), mirroring the paper's table-in-SDM with
-per-host checkers.
+N is the *per-shard* entry count.  The two-level search makes large shards
+cheap, so the ceiling is MAX_ENTRIES = 65536 (768 KiB of VMEM for the three
+entry arrays — comfortably resident); the global table is range-partitioned
+across the "model" mesh axis (see repro.launch.sharding), mirroring the
+paper's table-in-SDM with per-host checkers.
 """
 from __future__ import annotations
 
@@ -28,16 +44,38 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.table import HWPID_SHIFT, PAGE_MASK
+from repro.core.table import HWPID_SHIFT, PAGE_MASK, SUMMARY_TILE, tile_summary
+from repro.kernels import bucket_pad, resolve_interpret
 
 ADDR_BLOCK = 1024          # addresses per grid step = (8, 128) lanes
 ENTRY_TILE = 1024          # table entries folded per inner loop step
-MAX_ENTRIES = 8192
+MAX_ENTRIES = 65536        # per-shard ceiling (64 K entries, 768 KiB VMEM)
+
+assert ENTRY_TILE == SUMMARY_TILE, "kernel tile must match table summary tile"
 
 
-def _permcheck_kernel(addr_ref, starts_ref, ends_ref, permbits_ref,
-                      allowed_ref, idx_ref, *, hwpid: int, need: int,
-                      n_entries: int):
+def _match_tile(page, starts_ref, ends_ref, permbits_ref, t, needv, carry):
+    """Evaluate one ENTRY_TILE slab of the table against an (8, 128) page
+    block; shared by the flat and hierarchical kernels."""
+    any_hit, idx = carry
+    s = jax.lax.dynamic_slice(starts_ref[...], (t * ENTRY_TILE,),
+                              (ENTRY_TILE,))
+    e = jax.lax.dynamic_slice(ends_ref[...], (t * ENTRY_TILE,),
+                              (ENTRY_TILE,))
+    pb = jax.lax.dynamic_slice(permbits_ref[...], (t * ENTRY_TILE,),
+                               (ENTRY_TILE,))
+    # (8, 128, ENTRY_TILE) predicate evaluated on the VPU
+    in_r = (page[..., None] >= s) & (page[..., None] < e)
+    ok = in_r & (((pb & needv) == needv)[None, None, :])
+    any_hit = any_hit | jnp.any(ok, axis=-1)
+    local = jnp.argmax(in_r, axis=-1).astype(jnp.int32) + t * ENTRY_TILE
+    idx = jnp.where(jnp.any(in_r, axis=-1) & (idx < 0), local, idx)
+    return any_hit, idx
+
+
+def _permcheck_flat_kernel(addr_ref, starts_ref, ends_ref, permbits_ref,
+                           allowed_ref, idx_ref, *, hwpid: int, need: int,
+                           n_entries: int):
     ext = addr_ref[...].astype(jnp.int32).reshape(8, 128)
     tag = ext >> HWPID_SHIFT
     page = ext & PAGE_MASK
@@ -47,20 +85,8 @@ def _permcheck_kernel(addr_ref, starts_ref, ends_ref, permbits_ref,
     needv = jnp.uint32(need)
 
     def tile_step(t, carry):
-        any_hit, idx = carry
-        s = jax.lax.dynamic_slice(starts_ref[...], (t * ENTRY_TILE,),
-                                  (ENTRY_TILE,))
-        e = jax.lax.dynamic_slice(ends_ref[...], (t * ENTRY_TILE,),
-                                  (ENTRY_TILE,))
-        pb = jax.lax.dynamic_slice(permbits_ref[...], (t * ENTRY_TILE,),
-                                   (ENTRY_TILE,))
-        # (8, 128, ENTRY_TILE) predicate evaluated on the VPU
-        in_r = (page[..., None] >= s) & (page[..., None] < e)
-        ok = in_r & (((pb & needv) == needv)[None, None, :])
-        any_hit = any_hit | jnp.any(ok, axis=-1)
-        local = jnp.argmax(in_r, axis=-1).astype(jnp.int32) + t * ENTRY_TILE
-        idx = jnp.where(jnp.any(in_r, axis=-1) & (idx < 0), local, idx)
-        return any_hit, idx
+        return _match_tile(page, starts_ref, ends_ref, permbits_ref, t,
+                           needv, carry)
 
     any_hit = jnp.zeros((8, 128), bool)
     idx = jnp.full((8, 128), -1, jnp.int32)
@@ -71,22 +97,68 @@ def _permcheck_kernel(addr_ref, starts_ref, ends_ref, permbits_ref,
     idx_ref[...] = idx.reshape(idx_ref.shape)
 
 
-@functools.partial(jax.jit, static_argnames=("hwpid", "need", "interpret"))
-def permcheck_pallas(ext_addrs, starts, ends, permbits, *, hwpid: int,
-                     need: int, interpret: bool = True):
-    """Blocked Pallas permission check.  Pads B to ADDR_BLOCK and N to
-    ENTRY_TILE; padding entries use INT32_MAX sentinels (never match)."""
-    b = ext_addrs.shape[0]
-    bp = -(-b // ADDR_BLOCK) * ADDR_BLOCK
+def _hier_search(page, starts_ref, ends_ref, permbits_ref, tmin_ref,
+                 tmax_ref, n_tiles: int, needv):
+    """Two-level search over an (8, 128) page block; shared by the
+    hierarchical permcheck kernel and the fused egress kernel.
+
+    Level 1: cheap (8, 128, n_tiles) overlap test against the summary.
+    Sorted non-overlapping entries make the tile windows non-overlapping,
+    so each lane has at most one candidate; evaluating a superset of tiles
+    is only ever extra work, never a wrong answer.
+
+    Level 2: full (8, 128, ENTRY_TILE) evaluation only over the block's
+    candidate span [t_lo, t_hi] (dynamic fori bounds: tiles outside the
+    span cost nothing at all), with sparse middles cond-skipped.
+
+    Returns (any_hit bool(8,128), idx i32(8,128)).
+    """
+    tmin = tmin_ref[...]
+    tmax = tmax_ref[...]
+    cand = (page[..., None] >= tmin) & (page[..., None] < tmax)
+    tile_needed = jnp.any(cand, axis=(0, 1))        # bool[n_tiles]
+
+    tile_ids = jax.lax.broadcasted_iota(jnp.int32, (1, n_tiles), 1)[0]
+    t_lo = jnp.min(jnp.where(tile_needed, tile_ids, n_tiles))
+    t_hi = jnp.max(jnp.where(tile_needed, tile_ids, -1))
+
+    def tile_step(t, carry):
+        def heavy(c):
+            return _match_tile(page, starts_ref, ends_ref, permbits_ref, t,
+                               needv, c)
+        return jax.lax.cond(tile_needed[t], heavy, lambda c: c, carry)
+
+    any_hit = jnp.zeros((8, 128), bool)
+    idx = jnp.full((8, 128), -1, jnp.int32)
+    return jax.lax.fori_loop(t_lo, t_hi + 1, tile_step, (any_hit, idx))
+
+
+def _permcheck_hier_kernel(addr_ref, starts_ref, ends_ref, permbits_ref,
+                           tmin_ref, tmax_ref, allowed_ref, idx_ref, *,
+                           hwpid: int, need: int, n_entries: int):
+    ext = addr_ref[...].astype(jnp.int32).reshape(8, 128)
+    tag = ext >> HWPID_SHIFT
+    page = ext & PAGE_MASK
+    tag_ok = tag == jnp.int32(hwpid)
+
+    any_hit, idx = _hier_search(page, starts_ref, ends_ref, permbits_ref,
+                                tmin_ref, tmax_ref,
+                                n_entries // ENTRY_TILE, jnp.uint32(need))
+
+    allowed_ref[...] = (tag_ok & any_hit).astype(jnp.uint32).reshape(
+        allowed_ref.shape)
+    idx_ref[...] = idx.reshape(idx_ref.shape)
+
+
+def _pad_shard(starts, ends, permbits):
+    """Pad a table shard to a power-of-two multiple of ENTRY_TILE with
+    never-matching sentinels; returns (s, e, pb, padded_n)."""
     n = starts.shape[0]
-    np_ = max(ENTRY_TILE, -(-n // ENTRY_TILE) * ENTRY_TILE)
+    np_ = bucket_pad(n, ENTRY_TILE)
     if np_ > MAX_ENTRIES:
         raise ValueError(
             f"table shard has {n} entries > MAX_ENTRIES={MAX_ENTRIES}; "
             "range-partition the table across the model axis")
-
-    ext = jnp.full((bp,), -1, jnp.int32).at[:b].set(
-        jnp.asarray(ext_addrs, jnp.int32))
     smax = jnp.int32(np.iinfo(np.int32).max)
     s = jnp.full((np_,), smax, jnp.int32).at[:n].set(
         jnp.asarray(starts, jnp.int32))
@@ -94,27 +166,66 @@ def permcheck_pallas(ext_addrs, starts, ends, permbits, *, hwpid: int,
         jnp.asarray(ends, jnp.int32))
     pb = jnp.zeros((np_,), jnp.uint32).at[:n].set(
         jnp.asarray(permbits, jnp.uint32))
+    return s, e, pb, np_
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("hwpid", "need", "interpret", "mode"))
+def permcheck_pallas(ext_addrs, starts, ends, permbits, *, hwpid: int,
+                     need: int, interpret: bool | None = None,
+                     mode: str = "hier"):
+    """Blocked Pallas permission check.
+
+    Pads B to a power-of-two multiple of ADDR_BLOCK and N likewise to
+    ENTRY_TILE (bucketed padding -> varying batch sizes reuse jit caches);
+    padding entries use INT32_MAX sentinels (never match).  ``interpret=None``
+    auto-selects: compiled on TPU, interpreter elsewhere.
+    """
+    if mode not in ("hier", "flat"):
+        raise ValueError(f"unknown permcheck mode {mode!r}")
+    interpret = resolve_interpret(interpret)
+    b = ext_addrs.shape[0]
+    bp = bucket_pad(b, ADDR_BLOCK)
+    ext = jnp.full((bp,), -1, jnp.int32).at[:b].set(
+        jnp.asarray(ext_addrs, jnp.int32))
+    s, e, pb, np_ = _pad_shard(starts, ends, permbits)
 
     grid = (bp // ADDR_BLOCK,)
-    kernel = functools.partial(_permcheck_kernel, hwpid=hwpid, need=need,
-                               n_entries=np_)
+    entry_specs = [
+        pl.BlockSpec((np_,), lambda i: (0,)),
+        pl.BlockSpec((np_,), lambda i: (0,)),
+        pl.BlockSpec((np_,), lambda i: (0,)),
+    ]
+    out_specs = [
+        pl.BlockSpec((ADDR_BLOCK,), lambda i: (i,)),
+        pl.BlockSpec((ADDR_BLOCK,), lambda i: (i,)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((bp,), jnp.uint32),
+        jax.ShapeDtypeStruct((bp,), jnp.int32),
+    ]
+    if mode == "flat":
+        kernel = functools.partial(_permcheck_flat_kernel, hwpid=hwpid,
+                                   need=need, n_entries=np_)
+        operands = (ext, s, e, pb)
+        in_specs = [pl.BlockSpec((ADDR_BLOCK,), lambda i: (i,))] + entry_specs
+    else:
+        n_tiles = np_ // ENTRY_TILE
+        tmin, tmax = tile_summary(s, e, tile=ENTRY_TILE, n_tiles=n_tiles)
+        kernel = functools.partial(_permcheck_hier_kernel, hwpid=hwpid,
+                                   need=need, n_entries=np_)
+        operands = (ext, s, e, pb, tmin, tmax)
+        in_specs = ([pl.BlockSpec((ADDR_BLOCK,), lambda i: (i,))] +
+                    entry_specs +
+                    [pl.BlockSpec((n_tiles,), lambda i: (0,)),
+                     pl.BlockSpec((n_tiles,), lambda i: (0,))])
+
     allowed, idx = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((ADDR_BLOCK,), lambda i: (i,)),
-            pl.BlockSpec((np_,), lambda i: (0,)),
-            pl.BlockSpec((np_,), lambda i: (0,)),
-            pl.BlockSpec((np_,), lambda i: (0,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((ADDR_BLOCK,), lambda i: (i,)),
-            pl.BlockSpec((ADDR_BLOCK,), lambda i: (i,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((bp,), jnp.uint32),
-            jax.ShapeDtypeStruct((bp,), jnp.int32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(ext, s, e, pb)
+    )(*operands)
     return allowed[:b].astype(bool), idx[:b]

@@ -77,6 +77,40 @@ def memcrypt(data, key0: int, key1: int, base_word: int = 0):
 
 
 # ---------------------------------------------------------------------------
+# checked_memcrypt: fused egress (permission check ⊕ decrypt) oracle
+# ---------------------------------------------------------------------------
+
+def checked_memcrypt(data, ext_addrs, starts, ends, permbits, *, hwpid: int,
+                     need: int, key0: int, key1: int, base_word: int = 0):
+    """Oracle for the fused egress kernel: literally the composition of the
+    two oracles above — ``memcrypt`` for the keystream, ``permcheck`` for the
+    verdict — with denied lanes zeroed and per-word fault codes.
+
+    ``data[i]`` (u32) lives at page-tagged address ``ext_addrs[i]``; its
+    keystream position is ``base_word + i``.  Fault codes follow
+    ``repro.core.checker`` semantics: NO_ABITS (untagged), NOT_LOCAL (wrong
+    tenant tag), NO_ENTRY (no range covers the page), PERM (entry denies).
+
+    Returns (out u32[B], fault i32[B]).
+    """
+    from repro.core.checker import (FAULT_NO_ABITS, FAULT_NO_ENTRY,
+                                    FAULT_NONE, FAULT_NOT_LOCAL, FAULT_PERM)
+    d = jnp.asarray(data, jnp.uint32).reshape(-1)
+    ext = jnp.asarray(ext_addrs, jnp.int32)
+    allowed, idx = permcheck(ext, starts, ends, permbits, hwpid=hwpid,
+                             need=need)
+    dec = memcrypt(d, key0, key1, base_word)
+    out = jnp.where(allowed, dec, jnp.uint32(0))
+    tag = ext >> HWPID_SHIFT
+    fault = jnp.where(
+        allowed, FAULT_NONE,
+        jnp.where(tag <= 0, FAULT_NO_ABITS,
+                  jnp.where(tag != hwpid, FAULT_NOT_LOCAL,
+                            jnp.where(idx < 0, FAULT_NO_ENTRY, FAULT_PERM))))
+    return out, fault.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
 # flash attention (beyond-paper perf kernel; used in §Perf hillclimb)
 # ---------------------------------------------------------------------------
 

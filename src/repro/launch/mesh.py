@@ -24,3 +24,13 @@ def data_axes(mesh) -> tuple[str, ...]:
 def make_smoke_mesh():
     """1-device mesh for CPU smoke tests (same axis names as single-pod)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_abstract_mesh(shape, axes):
+    """AbstractMesh across jax versions: 0.4.x takes a single
+    ((name, size), ...) shape tuple; >=0.5 takes (sizes, names)."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))

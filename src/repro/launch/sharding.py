@@ -35,6 +35,11 @@ def _fits(mesh: Mesh, axis: str, dim: int) -> bool:
     return axis in mesh.axis_names and dim % _axis_size(mesh, axis) == 0
 
 
+def _squeeze_axes(axes: tuple[str, ...]):
+    """(a,) -> a: single-axis assignments use the bare name in specs."""
+    return axes[0] if len(axes) == 1 else axes
+
+
 class RuleEngine:
     def __init__(self, cfg: ArchConfig, mesh: Mesh):
         self.cfg = cfg
@@ -53,12 +58,12 @@ class RuleEngine:
             return None
         total = int(np.prod([_axis_size(self.mesh, a) for a in self.dp]))
         if dim % total == 0:
-            return self.dp
+            return _squeeze_axes(self.dp)
         return "data" if _fits(self.mesh, "data", dim) else None
 
     def dp_axes(self, dim: int):
         total = int(np.prod([_axis_size(self.mesh, a) for a in self.dp]))
-        return self.dp if dim % total == 0 else None
+        return _squeeze_axes(self.dp) if dim % total == 0 else None
 
     def expert(self, dim: int) -> str | None:
         ax = self.cfg.expert_axis
@@ -199,6 +204,48 @@ def cache_spec_tree(cfg: ArchConfig, mesh: Mesh, cache_shapes: Any) -> Any:
 def named(mesh: Mesh, spec_tree: Any) -> Any:
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Permission-table shard plumbing (Space-Control egress path)
+# ---------------------------------------------------------------------------
+# The global permission table is range-partitioned across the "model" mesh
+# axis; each host's checker sees one shard resident in VMEM (paper:
+# table-in-SDM with per-host checkers).  These helpers size the shards
+# against the Pallas kernel ceiling and produce the specs for the
+# struct-of-arrays table + its two-level tile summary.
+
+def permtable_shard_entries(mesh: Mesh, total_entries: int,
+                            *, max_entries: int | None = None) -> int:
+    """Entries per "model"-axis shard, tile-aligned so every shard's tile
+    summary stands alone; raises if a shard would exceed the Pallas
+    checker's MAX_ENTRIES ceiling."""
+    from repro.kernels.permcheck import ENTRY_TILE, MAX_ENTRIES
+    if max_entries is None:
+        max_entries = MAX_ENTRIES
+    ways = _axis_size(mesh, "model")
+    per = -(-max(int(total_entries), 1) // ways)
+    per = -(-per // ENTRY_TILE) * ENTRY_TILE
+    if per > max_entries:
+        raise ValueError(
+            f"{total_entries} entries over a {ways}-way model axis gives "
+            f"{per} entries/shard > kernel ceiling {max_entries}; widen the "
+            "model axis or raise kernels.permcheck.MAX_ENTRIES")
+    return per
+
+
+def permtable_specs(mesh: Mesh) -> dict[str, P]:
+    """PartitionSpecs for the permission-table arrays (entry dim over
+    "model") and the per-shard tile summary arrays."""
+    ax = "model" if "model" in mesh.axis_names else None
+    return {
+        "starts": P(ax),
+        "sizes": P(ax),
+        "perms": P(ax, None),
+        "meta": P(ax),
+        "tile_min": P(ax),
+        "tile_max": P(ax),
+    }
 
 
 def validate_specs(shape_tree: Any, spec_tree: Any, mesh: Mesh) -> list[str]:

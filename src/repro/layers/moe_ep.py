@@ -39,6 +39,24 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+# jax >= 0.5 exposes jax.shard_map(check_vma=...); 0.4.x has
+# jax.experimental.shard_map.shard_map(check_rep=...).  The kwarg is chosen
+# from the function's own signature, not the jax version, because
+# transitional releases ship jax.shard_map with the old check_rep name.
+import inspect
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+_CHECK_KW = ("check_vma" if "check_vma"
+             in inspect.signature(_shard_map).parameters else "check_rep")
+
+
+def _shmap(body, mesh, in_specs, out_specs):
+    return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_CHECK_KW: False})
+
 from repro.launch.activations import current_mesh
 
 
@@ -255,13 +273,12 @@ def moe_ffn_ep(p, x, *, top_k: int, capacity_factor: float = 1.25,
         body = functools.partial(
             _moe_block_model_axis, top_k=top_k, cap=cap, n_experts=e,
             model_axis=model_axis)
-        y, aux = jax.shard_map(
-            body, mesh=mesh,
+        y, aux = _shmap(
+            body, mesh,
             in_specs=(P(data_axes, None), P(None, None),
                       P(model_axis, None, None), P(model_axis, None, None),
                       P(model_axis, None, None)),
             out_specs=(P(data_axes, None), P()),
-            check_vma=False,
         )(xt, p["router"], p["w_gate"], p["w_up"], p["w_down"])
         return y.reshape(b, s, d), aux
 
@@ -274,14 +291,13 @@ def moe_ffn_ep(p, x, *, top_k: int, capacity_factor: float = 1.25,
             cap=max(int(np.ceil(t_loc * capacity_factor * top_k / e)), 1),
             n_experts=e, data_axes=data_axes,
             model_axis=model_axis or ())
-        y, aux = jax.shard_map(
-            body, mesh=mesh,
+        y, aux = _shmap(
+            body, mesh,
             in_specs=(P(data_axes, None), P(None, None),
                       P(data_axes, None, ffn_spec),
                       P(data_axes, None, ffn_spec),
                       P(data_axes, ffn_spec, None)),
             out_specs=(P(data_axes, None), P()),
-            check_vma=False,
         )(xt, p["router"], p["w_gate"], p["w_up"], p["w_down"])
         return y.reshape(b, s, d), aux
 

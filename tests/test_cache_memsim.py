@@ -1,6 +1,8 @@
 """Permission cache + reuse-distance machinery + memsim behaviour laws."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import LruCache

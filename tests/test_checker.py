@@ -1,6 +1,9 @@
 """Permission checker (paper §4.2.3): fault codes + oracle equivalence."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

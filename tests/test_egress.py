@@ -1,0 +1,361 @@
+"""Hierarchical egress fast path: two-level permcheck, fused
+permcheck⊕memcrypt kernel, and the vectorized permission cache.
+
+Every Pallas path must match its ref.py oracle bit-exactly;
+`cached_check_access` must be verdict-identical to `check_access`.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    PERM_R,
+    PERM_RW,
+    FabricManager,
+    LruCache,
+    Proposal,
+    make_hwpid_local,
+    pack_ext_addr,
+    tile_summary,
+)
+from repro.core.checker import (
+    cached_check_access_jit,
+    check_access,
+    make_perm_cache,
+)
+from repro.core.table import EMPTY_START, HWPID_SHIFT, _NO_END
+from repro.kernels import bucket_pad, ref
+from repro.kernels.memcrypt import checked_memcrypt_pallas
+from repro.kernels.permcheck import ENTRY_TILE, MAX_ENTRIES, permcheck_pallas
+
+
+def _mk_table(rng, n_entries, sdm_pages):
+    bounds = np.sort(rng.choice(sdm_pages, size=2 * n_entries, replace=False))
+    return (bounds[0::2].astype(np.int32), bounds[1::2].astype(np.int32),
+            rng.integers(0, 4, n_entries).astype(np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# tile summary
+# ---------------------------------------------------------------------------
+
+def test_tile_summary_bounds_and_padding(rng):
+    starts, ends, _ = _mk_table(rng, 2500, 1 << 20)
+    tmin, tmax = tile_summary(starts, ends, tile=1024)
+    tmin, tmax = np.asarray(tmin), np.asarray(tmax)
+    assert tmin.shape == (3,)
+    for t in range(2):
+        lo, hi = t * 1024, (t + 1) * 1024
+        assert tmin[t] == starts[lo:hi].min()
+        assert tmax[t] == ends[lo:hi].max()
+    # partial last tile: padding must not widen the window
+    assert tmin[2] == starts[2048:].min()
+    assert tmax[2] == ends[2048:].max()
+    # all-dead tile matches no page
+    tmin_e, tmax_e = tile_summary(np.full(8, EMPTY_START, np.int32),
+                                  np.full(8, EMPTY_START, np.int32), tile=8)
+    assert int(tmin_e[0]) == EMPTY_START and int(tmax_e[0]) == _NO_END
+
+
+def test_tile_summary_windows_disjoint(rng):
+    """Sorted non-overlapping entries -> tile windows non-overlapping, so
+    the hierarchical kernel has <=1 candidate tile per address."""
+    starts, ends, _ = _mk_table(rng, 4096, 1 << 22)
+    tmin, tmax = map(np.asarray, tile_summary(starts, ends, tile=1024))
+    assert np.all(tmax[:-1] <= tmin[1:])
+
+
+# ---------------------------------------------------------------------------
+# hierarchical permcheck kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_entries", [1, 1023, 1024, 1025, 2048, 5000])
+def test_hier_matches_ref_across_tile_boundaries(rng, n_entries):
+    sdm_pages = 1 << 22
+    starts, ends, perms = _mk_table(rng, n_entries, sdm_pages)
+    # address mix: uniform + exact tile-boundary entry edges (start, end-1,
+    # end) where off-by-one errors in the summary windows would bite
+    edges = np.concatenate([starts, ends - 1, ends]).astype(np.int32)
+    pages = np.concatenate([
+        rng.integers(0, sdm_pages, 512).astype(np.int32),
+        rng.choice(edges, min(512, edges.size)).astype(np.int32),
+    ]) & ((1 << HWPID_SHIFT) - 1)
+    tags = rng.choice([3, 3, 0, 5], pages.size).astype(np.int32)
+    ext = (tags << HWPID_SHIFT) | pages
+    for need in (1, 2, 3):
+        a_h, i_h = permcheck_pallas(jnp.asarray(ext), jnp.asarray(starts),
+                                    jnp.asarray(ends), jnp.asarray(perms),
+                                    hwpid=3, need=need, interpret=True)
+        a_r, i_r = ref.permcheck(jnp.asarray(ext), jnp.asarray(starts),
+                                 jnp.asarray(ends), jnp.asarray(perms),
+                                 hwpid=3, need=need)
+        np.testing.assert_array_equal(np.asarray(a_h), np.asarray(a_r))
+        cover = np.asarray(i_r) >= 0
+        np.testing.assert_array_equal(np.asarray(i_h)[cover],
+                                      np.asarray(i_r)[cover])
+
+
+def test_hier_matches_flat_beyond_old_cap(rng):
+    """N > 8192 (the old MAX_ENTRIES): hier == flat == ref."""
+    starts, ends, perms = _mk_table(rng, 12000, 1 << 22)
+    ext = ((3 << HWPID_SHIFT) |
+           rng.integers(0, 1 << 22, 2000)).astype(np.int32)
+    args = (jnp.asarray(ext), jnp.asarray(starts), jnp.asarray(ends),
+            jnp.asarray(perms))
+    a_h, _ = permcheck_pallas(*args, hwpid=3, need=1, interpret=True)
+    a_f, _ = permcheck_pallas(*args, hwpid=3, need=1, interpret=True,
+                              mode="flat")
+    a_r, _ = ref.permcheck(*args, hwpid=3, need=1)
+    np.testing.assert_array_equal(np.asarray(a_h), np.asarray(a_r))
+    np.testing.assert_array_equal(np.asarray(a_f), np.asarray(a_r))
+
+
+def test_empty_shard_denies_everything(rng):
+    ext = ((2 << HWPID_SHIFT) | rng.integers(0, 1 << 20, 64)).astype(np.int32)
+    allowed, idx = permcheck_pallas(
+        jnp.asarray(ext), jnp.zeros((0,), jnp.int32),
+        jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.uint32),
+        hwpid=2, need=1, interpret=True)
+    assert not bool(np.asarray(allowed).any())
+    assert np.all(np.asarray(idx) == -1)
+
+
+def test_capacity_guard_at_64k():
+    starts = np.zeros(MAX_ENTRIES + 1, np.int32)
+    with pytest.raises(ValueError):
+        permcheck_pallas(jnp.zeros((8,), jnp.int32), jnp.asarray(starts),
+                         jnp.asarray(starts),
+                         jnp.zeros(MAX_ENTRIES + 1, jnp.uint32),
+                         hwpid=1, need=1, interpret=True)
+
+
+def test_bucket_pad_powers_of_two():
+    assert bucket_pad(1, 1024) == 1024
+    assert bucket_pad(1024, 1024) == 1024
+    assert bucket_pad(1025, 1024) == 2048
+    assert bucket_pad(3000, 1024) == 4096
+    assert bucket_pad(5000, 1024) == 8192
+    # varying batch sizes in one bucket produce identical results
+    rng = np.random.default_rng(0)
+    starts, ends, perms = _mk_table(rng, 100, 1 << 16)
+    for b in (900, 1000, 1024):
+        ext = ((1 << HWPID_SHIFT) |
+               rng.integers(0, 1 << 16, b)).astype(np.int32)
+        a_p, _ = permcheck_pallas(jnp.asarray(ext), jnp.asarray(starts),
+                                  jnp.asarray(ends), jnp.asarray(perms),
+                                  hwpid=1, need=1, interpret=True)
+        a_r, _ = ref.permcheck(jnp.asarray(ext), jnp.asarray(starts),
+                               jnp.asarray(ends), jnp.asarray(perms),
+                               hwpid=1, need=1)
+        np.testing.assert_array_equal(np.asarray(a_p), np.asarray(a_r))
+
+
+# ---------------------------------------------------------------------------
+# fused permcheck ⊕ memcrypt kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_entries,batch", [(1, 100), (500, 1500),
+                                             (2048, 4096)])
+def test_fused_matches_composed_oracles(rng, n_entries, batch):
+    sdm_pages = 1 << 20
+    starts, ends, perms = _mk_table(rng, n_entries, sdm_pages)
+    pages = rng.integers(0, sdm_pages, batch).astype(np.int32)
+    tags = rng.choice([3, 3, 3, 0, 7], batch).astype(np.int32)
+    ext = (tags << HWPID_SHIFT) | pages
+    data = rng.integers(0, 1 << 32, batch, dtype=np.uint32)
+    for need in (1, 2):
+        o_p, f_p = checked_memcrypt_pallas(
+            jnp.asarray(data), jnp.asarray(ext), jnp.asarray(starts),
+            jnp.asarray(ends), jnp.asarray(perms), hwpid=3, need=need,
+            key0=0xAB, key1=0xCD, base_word=11, interpret=True)
+        o_r, f_r = ref.checked_memcrypt(
+            jnp.asarray(data), jnp.asarray(ext), jnp.asarray(starts),
+            jnp.asarray(ends), jnp.asarray(perms), hwpid=3, need=need,
+            key0=0xAB, key1=0xCD, base_word=11)
+        np.testing.assert_array_equal(np.asarray(o_p), np.asarray(o_r))
+        np.testing.assert_array_equal(np.asarray(f_p), np.asarray(f_r))
+
+
+def test_fused_denied_write_lanes_zeroed(rng):
+    """Read-only entry + write intent: lanes zeroed, FAULT_PERM reported."""
+    from repro.core import FAULT_NONE, FAULT_PERM
+    starts = np.asarray([100], np.int32)
+    ends = np.asarray([200], np.int32)
+    perms = np.asarray([PERM_R], np.uint32)
+    pages = np.arange(100, 164, dtype=np.int32)
+    ext = (np.int32(4) << HWPID_SHIFT) | pages
+    data = rng.integers(0, 1 << 32, 64, dtype=np.uint32)
+    out_w, fault_w = checked_memcrypt_pallas(
+        jnp.asarray(data), jnp.asarray(ext), jnp.asarray(starts),
+        jnp.asarray(ends), jnp.asarray(perms), hwpid=4, need=2,
+        key0=1, key1=2, interpret=True)
+    assert np.all(np.asarray(out_w) == 0)
+    assert np.all(np.asarray(fault_w) == FAULT_PERM)
+    out_r, fault_r = checked_memcrypt_pallas(
+        jnp.asarray(data), jnp.asarray(ext), jnp.asarray(starts),
+        jnp.asarray(ends), jnp.asarray(perms), hwpid=4, need=1,
+        key0=1, key1=2, interpret=True)
+    assert np.all(np.asarray(fault_r) == FAULT_NONE)
+    np.testing.assert_array_equal(
+        np.asarray(out_r), np.asarray(ref.memcrypt(jnp.asarray(data), 1, 2)))
+
+
+def test_fused_involution_on_allowed_lanes(rng):
+    """decrypt(encrypt(x)) == x wherever access is granted."""
+    starts = np.asarray([0], np.int32)
+    ends = np.asarray([1 << 20], np.int32)
+    perms = np.asarray([PERM_RW], np.uint32)
+    data = rng.integers(0, 1 << 32, 500, dtype=np.uint32)
+    pages = rng.integers(0, 1 << 20, 500).astype(np.int32)
+    ext = (np.int32(6) << HWPID_SHIFT) | pages
+    args = (jnp.asarray(starts), jnp.asarray(ends), jnp.asarray(perms))
+    enc, f1 = checked_memcrypt_pallas(jnp.asarray(data), jnp.asarray(ext),
+                                      *args, hwpid=6, need=1, key0=9, key1=8,
+                                      interpret=True)
+    dec, f2 = checked_memcrypt_pallas(enc, jnp.asarray(ext), *args, hwpid=6,
+                                      need=1, key0=9, key1=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(dec), data)
+    assert not np.asarray(f1).any() and not np.asarray(f2).any()
+
+
+def test_fused_empty_shard(rng):
+    data = rng.integers(0, 1 << 32, 32, dtype=np.uint32)
+    ext = ((1 << HWPID_SHIFT) | np.arange(32, dtype=np.int32))
+    out, fault = checked_memcrypt_pallas(
+        jnp.asarray(data), jnp.asarray(ext), jnp.zeros((0,), jnp.int32),
+        jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.uint32),
+        hwpid=1, need=1, key0=1, key1=1, interpret=True)
+    assert np.all(np.asarray(out) == 0)
+    from repro.core import FAULT_NO_ENTRY
+    assert np.all(np.asarray(fault) == FAULT_NO_ENTRY)
+
+
+# ---------------------------------------------------------------------------
+# vectorized permission cache
+# ---------------------------------------------------------------------------
+
+def _fm_with_regions(rng, n_regions=40, pid_perm=PERM_RW):
+    fm = FabricManager(sdm_pages=1 << 16, table_capacity=4096)
+    h0 = fm.enroll_host(0)
+    pid = h0.get_next_pid()
+    for _ in range(n_regions):
+        s = int(rng.integers(0, 1 << 15))
+        n = int(rng.integers(1, 64))
+        fm.propose(Proposal(0, pid, 1, s, n, pid_perm))
+    return fm, pid
+
+
+def test_cached_check_verdicts_equal_uncached(rng):
+    fm, pid = _fm_with_regions(rng)
+    table = fm.table.to_device()
+    local = make_hwpid_local([pid])
+    cache = make_perm_cache(16 * 1024)
+    pages0 = rng.integers(0, 1 << 16, 256).astype(np.int32)
+    for rep in range(5):
+        pages = pages0 if rep % 2 else \
+            rng.integers(0, 1 << 16, 256).astype(np.int32)
+        wr = jnp.asarray(rng.random(256) < 0.4)
+        ext = pack_ext_addr(np.full(256, pid, np.int32), pages)
+        base = check_access(table, local, ext, wr)
+        res, cache = cached_check_access_jit(table, local, ext, wr, cache)
+        np.testing.assert_array_equal(np.asarray(base.allowed),
+                                      np.asarray(res.allowed))
+        np.testing.assert_array_equal(np.asarray(base.fault),
+                                      np.asarray(res.fault))
+        np.testing.assert_array_equal(np.asarray(base.entry_idx),
+                                      np.asarray(res.entry_idx))
+    assert int(cache.hits) > 0
+
+
+def test_cache_all_hit_fast_path_skips_search(rng):
+    fm, pid = _fm_with_regions(rng, n_regions=1)
+    fm.propose(Proposal(0, pid, 1, 0, 4096, PERM_RW))
+    table = fm.table.to_device()
+    local = make_hwpid_local([pid])
+    cache = make_perm_cache(16 * 1024)
+    pages = rng.integers(0, 200, 512).astype(np.int32)
+    ext = pack_ext_addr(np.full(512, pid, np.int32), pages)
+    wr = jnp.zeros(512, bool)
+    r1, cache = cached_check_access_jit(table, local, ext, wr, cache)
+    r2, cache = cached_check_access_jit(table, local, ext, wr, cache)
+    assert int(np.asarray(r1.probes).sum()) > 0
+    assert int(np.asarray(r2.probes).sum()) == 0   # search skipped
+    np.testing.assert_array_equal(np.asarray(r1.allowed),
+                                  np.asarray(r2.allowed))
+
+
+def test_cache_stale_entry_revalidated_after_revocation(rng):
+    """FM revokes between batches: the cached mapping must fail validation
+    and the verdict must flip to denied (no stale grants, ever)."""
+    fm = FabricManager(sdm_pages=1 << 16, table_capacity=4096)
+    h0 = fm.enroll_host(0)
+    pid = h0.get_next_pid()
+    fm.propose(Proposal(0, pid, 1, 100, 50, PERM_RW))
+    local = make_hwpid_local([pid])
+    cache = make_perm_cache(16 * 1024)
+    pages = np.arange(100, 150, dtype=np.int32)
+    ext = pack_ext_addr(np.full(50, pid, np.int32), pages)
+    wr = jnp.zeros(50, bool)
+    table = fm.table.to_device()
+    r1, cache = cached_check_access_jit(table, local, ext, wr, cache)
+    assert np.asarray(r1.allowed).all()
+    fm.table.remove_hwpid(pid)           # revocation rewrites the table
+    table2 = fm.table.to_device()
+    r2, cache = cached_check_access_jit(table2, local, ext, wr, cache)
+    base2 = check_access(table2, local, ext, wr)
+    np.testing.assert_array_equal(np.asarray(base2.allowed),
+                                  np.asarray(r2.allowed))
+    assert not np.asarray(r2.allowed).any()
+
+
+def test_direct_mapped_matches_lru_without_conflicts(rng):
+    """Cross-validation against the exact LRU model: when the working set
+    maps conflict-free (distinct sets, fits capacity), a direct-mapped cache
+    and fully-associative LRU of the same capacity see identical hit/miss
+    sequences."""
+    fm, pid = _fm_with_regions(rng, n_regions=1)
+    fm.propose(Proposal(0, pid, 1, 0, 256, PERM_RW))
+    table = fm.table.to_device()
+    local = make_hwpid_local([pid])
+    n_sets = 256
+    cache = make_perm_cache(n_sets * 64)
+    lru = LruCache(n_sets * 64)
+    trace = rng.integers(0, 256, 400).astype(np.int32)  # pages == sets, 1:1
+    for p in trace:
+        lru_hit = lru.access(int(p))
+        ext = pack_ext_addr(np.asarray([pid], np.int32),
+                            np.asarray([p], np.int32))
+        before = int(cache.hits)
+        _, cache = cached_check_access_jit(table, local, ext,
+                                           jnp.zeros(1, bool), cache)
+        assert (int(cache.hits) - before == 1) == lru_hit
+    assert lru.hits == int(cache.hits)
+    assert lru.misses == int(cache.misses)
+
+
+def test_perm_cache_capacity_validation():
+    with pytest.raises(ValueError):
+        make_perm_cache(100)            # not a multiple of 64
+    with pytest.raises(ValueError):
+        make_perm_cache(192)            # 3 sets: not a power of two
+    assert make_perm_cache(16 * 1024).n_sets == 256
+
+
+# ---------------------------------------------------------------------------
+# shard plumbing
+# ---------------------------------------------------------------------------
+
+def test_permtable_shard_plumbing():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_abstract_mesh
+    from repro.launch.sharding import permtable_shard_entries, permtable_specs
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
+    per = permtable_shard_entries(mesh, 1 << 20)   # 1M entries / 16 ways
+    assert per == 65536 and per % ENTRY_TILE == 0
+    with pytest.raises(ValueError):
+        permtable_shard_entries(mesh, 1 << 21)     # 128K/shard > ceiling
+    specs = permtable_specs(mesh)
+    assert specs["starts"] == P("model")
+    assert specs["perms"] == P("model", None)
+    assert specs["tile_min"] == P("model")

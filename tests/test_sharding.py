@@ -4,14 +4,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, SHAPES
 from repro.launch import sharding as sh
+from repro.launch.mesh import make_abstract_mesh
 from repro.models import registry
 
-POD = AbstractMesh((16, 16), ("data", "model"))
-MULTIPOD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+POD = make_abstract_mesh((16, 16), ("data", "model"))
+MULTIPOD = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 ARCH_IDS = list(ARCHS)
 

@@ -6,6 +6,8 @@ and that the device-side binary search agrees with a naive oracle.
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
