@@ -1,0 +1,105 @@
+"""Serve-engine churn smoke bench: tenant admission/eviction/revocation
+during continuous batching, on the real decode engine.
+
+    PYTHONPATH=src python benchmarks/churn_bench.py --smoke \
+        [--out BENCH_churn.json] [--rounds 3] [--seed 0]
+
+Where `kernels_bench.py --only churn` isolates the *check-path* cost of
+churn (the acceptance ratio recorded in BENCH_kernels.json), this bench
+drives the whole `launch.serve.ServeEngine`: model prefill/decode, KV page
+accounting, FM transactions, BISnp-wired PermCache, page-span reuse.  It
+reports per-step wall-clock with and without churn plus lifecycle
+counters, and asserts the basic lifecycle invariants so CI fails loudly if
+churn breaks serving.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, smoke_config
+from repro.launch.serve import ServeEngine
+from repro.models import registry
+
+
+def _drive(engine, rng, *, rounds: int, gen: int, plen: int) -> dict:
+    """Churn loop: every round admits a tenant, loads it and the keeper,
+    serves to drain, then revokes + evicts the round's tenant."""
+    step_s = []
+    engine.add_tenant("keeper", host_id=0)
+    for r in range(rounds):
+        name = f"round{r}"
+        engine.add_tenant(name, host_id=1)
+        for _ in range(2):
+            engine.submit(name, rng.integers(3, engine.cfg.vocab - 1, plen))
+        engine.submit("keeper", rng.integers(3, engine.cfg.vocab - 1, plen))
+        while engine.has_work():
+            t0 = time.perf_counter()
+            engine.step(gen=gen)
+            step_s.append(time.perf_counter() - t0)
+        assert len(engine.tenants[name].done) == 2, "tenant lost requests"
+        engine.revoke(name)
+        engine.submit(name, rng.integers(3, engine.cfg.vocab - 1, plen))
+        res = engine.run_tenant(name, gen=gen)
+        assert res["aborted"], "revoked tenant kept decoding"
+        engine.evict_tenant(name)
+    keeper = engine.tenants["keeper"]
+    assert len(keeper.done) == rounds and not keeper.aborted, \
+        "churn disturbed the keeper tenant"
+    return {
+        "median_step_ms": round(float(np.median(step_s)) * 1e3, 2),
+        "p90_step_ms": round(float(np.quantile(step_s, 0.9)) * 1e3, 2),
+        "decode_steps": engine.steps,
+        "faults": engine.faults,
+        "bisnp_events": engine.bisnp_events,
+        "perm_cache_hit_rate": round(engine.permcache.hit_rate, 4),
+        "pool_pages": engine.pool.total_pages,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=list(ARCHS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI")
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--gen", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_churn.json")
+    args = ap.parse_args()
+    gen = args.gen or (4 if args.smoke else 16)
+    plen = args.prompt_len or (8 if args.smoke else 32)
+
+    cfg = smoke_config(ARCHS[args.arch]) if args.smoke else ARCHS[args.arch]
+    params = registry.init_params(cfg, jax.random.key(args.seed))
+    rng = np.random.default_rng(args.seed)
+
+    t0 = time.time()
+    engine = ServeEngine(cfg, params, batch=args.batch, cap=plen + gen)
+    result = _drive(engine, rng, rounds=args.rounds, gen=gen, plen=plen)
+    result.update({
+        "bench": "serve_churn",
+        "arch": args.arch,
+        "rounds": args.rounds,
+        "gen": gen,
+        "batch": args.batch,
+        "wall_s": round(time.time() - t0, 1),
+        "note": "full ServeEngine lifecycle under churn: admission, "
+                "revocation mid-flight, eviction with page reuse; the "
+                "check-path churn/static ratio lives in BENCH_kernels.json "
+                "(bench 'churn')",
+    })
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1, default=float)
+    print(json.dumps(result, indent=1, default=float))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ from .checker import (
     binary_search,
     cached_check_access,
     check_access,
+    invalidate_perm_cache,
     make_hwpid_local,
     make_perm_cache,
 )
@@ -38,12 +39,14 @@ from .table import (
     PERM_RW,
     PERM_W,
     SUMMARY_TILE,
+    CommitInfo,
     HostTable,
     PermissionTable,
     extract_perm,
     make_table,
     pack_ext_addr,
     perm_words_for,
+    tenant_permbits,
     tile_summary,
     unpack_ext_addr,
 )

@@ -104,10 +104,15 @@ def make_hwpid_local(hwpids) -> jax.Array:
 # The paper's checker hides table-walk latency behind a small SRAM cache of
 # recently matched entries.  `PermCache` is the batched jnp analogue: a
 # direct-mapped map page -> matched entry index, held as plain arrays so the
-# whole probe/refill runs inside jit.  On a probe hit the cached entry is
-# re-validated against the live table (so FM rewrites / revocations can never
-# produce a stale grant — a wrong cached index simply misses), and when EVERY
-# lane of a batch hits, the log2(N) binary search is skipped entirely via
+# whole probe/refill runs inside jit.  The cache is EPOCH-FENCED against the
+# table it mirrors (paper §4.1.3/§7.1.7): when `cache.epoch == table.epoch`
+# the FM's BISnp protocol guarantees every surviving mapping is current, so
+# probe hits skip live-table revalidation entirely and an all-hit batch does
+# no table reads in the probe stage at all.  When the epochs diverge (an
+# unwired cache, or a missed back-invalidate) the probe falls back to
+# revalidating each hit against the live table — a stale mapping then fails
+# validation and degrades to a miss, never to a stale grant.  When EVERY lane
+# of a batch hits, the log2(N) binary search is skipped entirely via
 # `lax.cond` — the vectorized fast path for the repeated-page traffic the
 # paper's cache exploits.  The exact fully-associative LRU model lives in
 # `repro.core.cache.LruCache` / memsim; this cache trades associativity for a
@@ -122,6 +127,7 @@ class PermCache(NamedTuple):
     entry: jax.Array    # i32[n_sets] table entry index the page matched
     hits: jax.Array     # i32[] cumulative probe hits
     misses: jax.Array   # i32[] cumulative probe misses
+    epoch: jax.Array    # i32[] table epoch the surviving mappings are valid at
 
     @property
     def n_sets(self) -> int:
@@ -137,7 +143,12 @@ class PermCache(NamedTuple):
         return int(self.hits) / t if t else 0.0
 
 
-def make_perm_cache(capacity_bytes: int = PERM_CACHE_BYTES) -> PermCache:
+def make_perm_cache(capacity_bytes: int = PERM_CACHE_BYTES,
+                    *, epoch: int = 0) -> PermCache:
+    """Fresh (all-invalid) cache.  Pass ``epoch=table.epoch`` (or wire
+    `invalidate_perm_cache` to the FM's BISnp broadcasts) to enable the
+    fenced fast path; a cache left at an older epoch still returns correct
+    verdicts via per-hit revalidation."""
     if capacity_bytes % CACHE_ENTRY_BYTES:
         raise ValueError("capacity must be a multiple of 64 B entries")
     n_sets = capacity_bytes // CACHE_ENTRY_BYTES
@@ -148,6 +159,56 @@ def make_perm_cache(capacity_bytes: int = PERM_CACHE_BYTES) -> PermCache:
         entry=jnp.full((n_sets,), -1, jnp.int32),
         hits=jnp.zeros((), jnp.int32),
         misses=jnp.zeros((), jnp.int32),
+        epoch=jnp.asarray(epoch, jnp.int32),
+    )
+
+
+def invalidate_perm_cache(
+    cache: PermCache,
+    start_page,
+    n_pages,
+    epoch,
+    *,
+    min_shifted_entry: int | None = None,
+) -> PermCache:
+    """Apply one FM BISnp back-invalidate to the cache (targeted, no
+    flush-the-world): drop mappings whose page falls in the dirty range
+    ``[start_page, start_page + n_pages)`` and — when the commit shifted
+    entry indices — mappings whose cached index is ``>= min_shifted_entry``.
+
+    Epoch fencing rules (events may be duplicated or replayed by an
+    adversary; both are harmless):
+      * ``epoch == cache.epoch + 1`` — the expected next event: targeted
+        drop, fence advances.
+      * ``epoch <= cache.epoch`` — duplicate/replayed event: targeted drop
+        (conservative, never unsafe), fence unchanged.
+      * ``epoch > cache.epoch + 1`` — at least one event was missed: the
+        intermediate dirty ranges are unknown, so every mapping is dropped
+        (the resync path — NOT the normal path) and the fence jumps forward.
+    """
+    # None -> INT32_MAX sentinel (drops nothing) so the index is a traced
+    # operand: churn broadcasts with ever-different indices reuse one jit
+    # trace instead of recompiling per value.
+    if min_shifted_entry is None:
+        min_shifted_entry = np.iinfo(np.int32).max
+    return _invalidate_perm_cache_jit(cache, start_page, n_pages, epoch,
+                                      min_shifted_entry)
+
+
+@jax.jit
+def _invalidate_perm_cache_jit(cache, start_page, n_pages, epoch,
+                               min_shifted_entry):
+    start = jnp.asarray(start_page, jnp.int32)
+    n = jnp.asarray(n_pages, jnp.int32)
+    ev_epoch = jnp.asarray(epoch, jnp.int32)
+    drop = (cache.tag >= start) & (cache.tag < start + n)
+    drop = drop | (cache.entry >= jnp.asarray(min_shifted_entry, jnp.int32))
+    gap = ev_epoch > cache.epoch + 1
+    drop = drop | gap
+    return cache._replace(
+        tag=jnp.where(drop, -1, cache.tag),
+        entry=jnp.where(drop, -1, cache.entry),
+        epoch=jnp.maximum(cache.epoch, ev_epoch),
     )
 
 
@@ -189,23 +250,35 @@ def cached_check_access(
     Semantically identical to `check_access` (same CheckResult fields except
     `probes`, which is 0 on cache-hit lanes — the search was skipped);
     additionally returns the updated cache.  Purely functional: thread the
-    returned cache into the next call.
+    returned cache into the next call, and apply `invalidate_perm_cache` for
+    every FM BISnp event to keep the epoch fence closed.
     """
     hwpid, page = unpack_ext_addr(ext_addrs)
     is_write = jnp.asarray(is_write, bool)
     n_sets = cache.n_sets
 
-    # probe: direct-mapped on the low page bits, validated against the table
-    # (a stale mapping fails validation and degrades to a miss, never to a
-    # wrong verdict)
+    # probe: direct-mapped on the low page bits.  Inside the epoch fence the
+    # BISnp protocol already guarantees freshness, so the probe is just a tag
+    # compare; outside it every hit is revalidated against the live table (a
+    # stale mapping then fails validation and degrades to a miss, never to a
+    # wrong verdict).
     set_idx = page & (n_sets - 1)
     ctag = cache.tag[set_idx]
     cent = cache.entry[set_idx]
     probe_ok = (ctag == page) & (cent >= 0)
     safe_cent = jnp.clip(cent, 0, table.capacity - 1)
-    cs = table.starts[safe_cent]
-    csz = table.sizes[safe_cent]
-    hit = probe_ok & (page >= cs) & (page < cs + csz) & (cs != EMPTY_START)
+    fenced = cache.epoch == jnp.asarray(table.epoch, jnp.int32)
+
+    def probe_fenced(_):
+        return probe_ok
+
+    def probe_revalidate(_):
+        cs = table.starts[safe_cent]
+        csz = table.sizes[safe_cent]
+        return (probe_ok & (page >= cs) & (page < cs + csz)
+                & (cs != EMPTY_START))
+
+    hit = jax.lax.cond(fenced, probe_fenced, probe_revalidate, None)
 
     # fast path: when the whole batch hits, skip the binary search entirely
     def slow(_):
@@ -239,6 +312,10 @@ def cached_check_access(
         entry=new_ent,
         hits=cache.hits + n_hits,
         misses=cache.misses + (jnp.int32(page.size) - n_hits),
+        # refills never advance the fence: only BISnp events do.  Entries
+        # installed while the fence is open are validated per-hit until the
+        # missing events arrive (or forever, for an unwired cache).
+        epoch=cache.epoch,
     )
     return result, new_cache
 

@@ -4,17 +4,26 @@ The FM is the trusted coordination point: it owns K_FM, approves proposed
 permission-table entries, commits them (coalescing overlaps), issues public
 labels L_exp, and broadcasts BISnp back-invalidates on every committed update
 so host-side permission caches drop stale entries (paper §4.1.3 / §7.1.7).
+
+Live-update control plane: every committed table transaction bumps the table
+epoch and broadcasts ONE `BISnpEvent` carrying the minimal dirty page range
+(from `HostTable.commit`'s shadow-buffer diff) plus the new epoch.  Hosts
+apply it to their `PermCache` via
+`repro.core.checker.invalidate_perm_cache` — targeted drops only, which is
+what keeps the cache's epoch fence closed and its all-hit fast path hot
+across tenant churn.
 """
 from __future__ import annotations
 
+import contextlib
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Callable, Iterator
 
 import numpy as np
 
 from .crypto import derive_key, hmac_label
 from .space import SpaceEngine
-from .table import HostTable, MAX_HWPID, perm_words_for
+from .table import CommitInfo, HostTable, MAX_HWPID, perm_words_for
 
 
 @dataclass
@@ -30,8 +39,14 @@ class Proposal:
 
 @dataclass
 class BISnpEvent:
+    """One back-invalidate broadcast: pages whose permission mapping changed
+    at `epoch`.  `min_entry_idx` (when set) is the smallest table index whose
+    position shifted in the commit — caches storing entry indices must also
+    drop mappings at/after it (see `HostTable.CommitInfo`)."""
     start_page: int
     n_pages: int
+    epoch: int = 0
+    min_entry_idx: int | None = None
 
 
 class FabricManager:
@@ -50,6 +65,10 @@ class FabricManager:
         self._bisnp_listeners: list[Callable[[BISnpEvent], None]] = []
         self.audit_log: list[str] = []
         self._policy: Callable[[Proposal], bool] = lambda p: True
+        self._txn_depth = 0
+        # FM-level side effects (hwpid_global, L_exp install, audit) staged
+        # while a transaction is open; applied on commit, dropped on abort
+        self._txn_effects: list[Callable[[], None]] = []
 
     # -- host enrolment --------------------------------------------------------
     def enroll_host(self, host_id: int, n_cores: int = 8) -> SpaceEngine:
@@ -71,6 +90,69 @@ class FabricManager:
     def on_bisnp(self, fn: Callable[[BISnpEvent], None]) -> None:
         self._bisnp_listeners.append(fn)
 
+    # -- epoch-versioned commit plumbing ---------------------------------------
+    @property
+    def epoch(self) -> int:
+        return self.table.epoch
+
+    @contextlib.contextmanager
+    def transaction(self) -> Iterator["FabricManager"]:
+        """Coalesce several grant/revoke operations into ONE table commit —
+        one epoch bump, one BISnp broadcast covering the union dirty range.
+        Nested transactions are flattened into the outermost one."""
+        if self._txn_depth:
+            self._txn_depth += 1
+            try:
+                yield self
+            finally:
+                self._txn_depth -= 1
+            return
+        self.table.begin()
+        self._txn_depth = 1
+        try:
+            yield self
+        except BaseException:
+            self.table.abort()
+            self._txn_effects.clear()
+            raise
+        finally:
+            self._txn_depth -= 1
+        self._commit_and_broadcast()
+        for effect in self._txn_effects:
+            effect()
+        self._txn_effects.clear()
+
+    def _commit_and_broadcast(self) -> CommitInfo | None:
+        info = self.table.commit()
+        if info is not None:
+            ranges = info.ranges or ((info.start_page, info.n_pages),)
+            for start, n in ranges:
+                self._broadcast(BISnpEvent(start, n, epoch=info.epoch,
+                                           min_entry_idx=info.min_shifted_entry))
+        return info
+
+    def _mutate_table(self, fn):
+        """Run `fn()` (table mutations) inside the open transaction, or as a
+        single auto-committed + broadcast transaction."""
+        if self._txn_depth:
+            return fn()
+        self.table.begin()
+        try:
+            ret = fn()
+        except BaseException:
+            self.table.abort()
+            raise
+        self._commit_and_broadcast()
+        return ret
+
+    def _stage_effect(self, effect: Callable[[], None]) -> None:
+        """Apply an FM-level side effect now, or — inside a transaction —
+        stage it so an abort rolls it back along with the table."""
+        if self._txn_depth:
+            self._txn_effects.append(effect)
+        else:
+            effect()
+
     # -- proposal -> approve -> commit -> label (Fig. 2 workflow) --------------
     def propose(self, p: Proposal) -> int | None:
         """Returns L_exp on approval, None on rejection."""
@@ -87,27 +169,51 @@ class FabricManager:
             self.audit_log.append(f"REJECT policy {p}")
             return None
         # Commit: FM optimizes/coalesces overlapping entries (paper §4.1.1)
-        self.table.insert(p.start_page, p.n_pages,
-                          perm_words_for({p.hwpid: p.perm}),
-                          owner_host=p.host_id)
-        self._hwpid_global.add(p.hwpid)
-        # L_exp = MAC_{K_FM}(host_id, HWPID, BASE_P, range)   (Eq. 1)
+        self._mutate_table(lambda: self.table.insert(
+            p.start_page, p.n_pages, perm_words_for({p.hwpid: p.perm}),
+            owner_host=p.host_id))
+        # L_exp = MAC_{K_FM}(host_id, HWPID, BASE_P, range)   (Eq. 1).
+        # Computing it is pure; the grant bookkeeping (hwpid_global, label
+        # install, audit) is staged so a transaction abort rolls it back —
+        # inside a transaction the returned label only becomes live at
+        # commit.
         label = hmac_label(self._k_fm, p.host_id, p.hwpid, p.base_p,
                            (p.start_page << 24) | p.n_pages)
-        self.hosts[p.host_id].install_lexp(
-            p.hwpid, p.base_p, label, (p.start_page, p.n_pages))
-        self._broadcast(BISnpEvent(p.start_page, p.n_pages))
-        self.audit_log.append(
-            f"COMMIT host={p.host_id} hwpid={p.hwpid} "
-            f"[{p.start_page},+{p.n_pages}) perm={p.perm}")
+
+        def committed(p=p, label=label):
+            self._hwpid_global.add(p.hwpid)
+            self.hosts[p.host_id].install_lexp(
+                p.hwpid, p.base_p, label, (p.start_page, p.n_pages))
+            self.audit_log.append(
+                f"COMMIT host={p.host_id} hwpid={p.hwpid} "
+                f"[{p.start_page},+{p.n_pages}) perm={p.perm}")
+
+        self._stage_effect(committed)
         return label
 
     def revoke_hwpid(self, hwpid: int) -> None:
-        """Revocation: clear permissions, drop empty entries, BISnp all hosts."""
-        self.table.remove_hwpid(hwpid)
-        self._hwpid_global.discard(hwpid)
-        self._broadcast(BISnpEvent(0, self.sdm_pages))
-        self.audit_log.append(f"REVOKE hwpid={hwpid}")
+        """Revocation: clear permissions, drop empty entries, and BISnp all
+        hosts with the commit's actual dirty range (targeted — hosts keep
+        every cached mapping the revoke did not touch)."""
+        self._mutate_table(lambda: self.table.remove_hwpid(hwpid))
+        self._stage_effect(lambda: (
+            self._hwpid_global.discard(hwpid),
+            self.audit_log.append(f"REVOKE hwpid={hwpid}")))
+
+    def release_range(self, hwpid: int, start_page: int, n_pages: int) -> None:
+        """Partial release: revoke one HWPID's grant over a page range only
+        (region release on tenant eviction), leaving its other grants live."""
+        self._mutate_table(
+            lambda: self.table.revoke_range(start_page, n_pages, hwpid))
+        self._stage_effect(lambda: self.audit_log.append(
+            f"RELEASE hwpid={hwpid} [{start_page},+{n_pages})"))
+
+    def vacuum(self) -> None:
+        """Compact revocation tombstones out of the table (deliberate
+        maintenance; shifts entry indices, so the broadcast carries
+        min_entry_idx and caches drop shifted mappings)."""
+        self._mutate_table(self.table.vacuum)
+        self._stage_effect(lambda: self.audit_log.append("VACUUM"))
 
     def hwpid_global(self) -> set[int]:
         """HWPID_global = union over hosts (paper §4.2.2)."""

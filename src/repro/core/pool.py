@@ -51,6 +51,21 @@ class SharedTensorPool:
         self._regions: dict[str, Region] = {}
         self._tensors: dict[str, jax.Array] = {}
         self._next_page = 1  # page 0 reserved (metadata section, Fig. 5)
+        self._free: list[tuple[int, int]] = []  # (start, n) released spans
+
+    def _alloc(self, n_pages: int) -> int:
+        """First-fit from the free list (tenant churn reuses released page
+        ranges instead of growing the address space), else bump-allocate."""
+        for i, (start, n) in enumerate(self._free):
+            if n >= n_pages:
+                if n == n_pages:
+                    self._free.pop(i)
+                else:
+                    self._free[i] = (start + n_pages, n - n_pages)
+                return start
+        start = self._next_page
+        self._next_page += n_pages
+        return start
 
     def register(self, name: str, tensor: jax.Array) -> Region:
         if name in self._regions:
@@ -59,11 +74,27 @@ class SharedTensorPool:
         row_shape = tuple(tensor.shape[1:])
         bpr = int(np.prod(row_shape, dtype=np.int64)) * tensor.dtype.itemsize
         n_pages = max(1, -(-rows * bpr // PAGE_BYTES))
-        region = Region(name, self._next_page, n_pages, row_shape,
+        region = Region(name, self._alloc(n_pages), n_pages, row_shape,
                         np.dtype(tensor.dtype), rows)
-        self._next_page += n_pages
         self._regions[name] = region
         self._tensors[name] = tensor
+        return region
+
+    def unregister(self, name: str) -> Region:
+        """Release a region: the tensor is dropped and its page span joins
+        the free list (coalescing adjacent spans).  The caller is
+        responsible for revoking outstanding grants FIRST — the pool only
+        manages addresses, the permission table manages access."""
+        region = self._regions.pop(name)
+        self._tensors.pop(name, None)
+        spans = sorted(self._free + [(region.start_page, region.n_pages)])
+        merged: list[tuple[int, int]] = []
+        for s, n in spans:
+            if merged and merged[-1][0] + merged[-1][1] == s:
+                merged[-1] = (merged[-1][0], merged[-1][1] + n)
+            else:
+                merged.append((s, n))
+        self._free = merged
         return region
 
     def region(self, name: str) -> Region:

@@ -20,7 +20,8 @@ Addresses are 4 KiB-page granular (DESIGN.md §2): ext_addr = hwpid<<24 | page.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import contextlib
+from typing import Iterator, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +53,7 @@ class PermissionTable(NamedTuple):
     perms: jax.Array    # u32[cap, PERM_WORDS]
     meta: jax.Array     # u32[cap]
     n: jax.Array        # i32[] live count
+    epoch: jax.Array | int = 0   # committed table version (see HostTable)
 
     @property
     def capacity(self) -> int:
@@ -146,10 +148,58 @@ def extract_perm(perm_words, hwpid):
     return (word >> shift) & jnp.uint32(3)
 
 
+def tenant_permbits(table: PermissionTable, hwpid: int) -> jax.Array:
+    """Per-entry 2-bit permission field pre-extracted for one tenant —
+    the u32[cap] operand the Pallas checker kernels consume."""
+    word = table.perms[:, hwpid // 16]
+    return (word >> jnp.uint32((hwpid % 16) * 2)) & jnp.uint32(3)
+
+
 # ---------------------------------------------------------------------------
 # Host-side (numpy) authoritative copy used by the Fabric Manager.  The FM owns
 # insertion / coalescing; hosts only read the committed table (paper Fig. 2).
+#
+# The table is EPOCH-VERSIONED with a double-buffered (shadow) commit:
+# mutations build in a shadow buffer while readers keep seeing the committed
+# front buffer; `commit()` swaps the buffers atomically, bumps the epoch, and
+# returns the minimal dirty page range — the payload of the FM's BISnp
+# back-invalidate (paper §4.1.3/§7.1.7).  Mutators called outside an explicit
+# `begin()` auto-open-and-commit a single-op transaction, so standalone use
+# keeps the old immediate-visibility semantics.
 # ---------------------------------------------------------------------------
+
+
+class CommitInfo(NamedTuple):
+    """What a shadow commit changed — drives targeted cache invalidation.
+
+    ``[start_page, start_page + n_pages)`` bounds every page whose
+    (range, perms, meta) mapping differs between the two epochs; pages
+    outside it are guaranteed byte-identical, so caches may keep them.
+    ``ranges`` splits that bound into the per-run dirty ranges (one per
+    contiguous run of changed entries, at most ``MAX_DIRTY_RANGES``) so a
+    commit touching two far-apart regions does not invalidate everything
+    between them.  ``min_shifted_entry`` is the smallest table index whose
+    *position* may have changed (entry count changed ⇒ indices at/after the
+    first difference slid); ``None`` means every surviving entry kept its
+    index, so page-range invalidation alone is sufficient.
+    """
+    epoch: int
+    start_page: int
+    n_pages: int
+    min_shifted_entry: int | None
+    ranges: tuple[tuple[int, int], ...] = ()
+
+
+MAX_DIRTY_RANGES = 16   # per-commit BISnp fan-out cap (beyond: bounding box)
+
+
+class _Buf(NamedTuple):
+    starts: np.ndarray
+    sizes: np.ndarray
+    perms: np.ndarray
+    meta: np.ndarray
+    n: int
+
 
 class HostTable:
     """Numpy mirror with FM-side mutation (sorted, non-overlapping ranges)."""
@@ -161,6 +211,116 @@ class HostTable:
         self.perms = np.zeros((capacity, PERM_WORDS), np.uint32)
         self.meta = np.zeros((capacity,), np.uint32)
         self.n = 0
+        self.epoch = 0
+        self._shadow: _Buf | None = None
+        self.last_commit: CommitInfo | None = None
+
+    # -- shadow transaction --------------------------------------------------
+    def begin(self) -> None:
+        """Open a shadow transaction: subsequent mutations are invisible to
+        readers until `commit()`.  Nested begins are an error."""
+        if self._shadow is not None:
+            raise RuntimeError("shadow transaction already open")
+        self._shadow = _Buf(self.starts.copy(), self.sizes.copy(),
+                            self.perms.copy(), self.meta.copy(), self.n)
+
+    def abort(self) -> None:
+        self._shadow = None
+
+    def commit(self) -> CommitInfo | None:
+        """Swap the shadow buffer in; bump the epoch iff anything changed.
+
+        Returns the CommitInfo describing the dirty page range (None when
+        the transaction was a no-op — no epoch bump, no BISnp needed).
+        """
+        sh = self._shadow
+        if sh is None:
+            raise RuntimeError("no shadow transaction open")
+        self._shadow = None
+        diff = self._diff(sh)
+        if diff is None:
+            return None
+        self.starts, self.sizes = sh.starts, sh.sizes
+        self.perms, self.meta, self.n = sh.perms, sh.meta, sh.n
+        self.epoch += 1
+        dirty_lo, dirty_hi, min_shifted, ranges = diff
+        self.last_commit = CommitInfo(self.epoch, dirty_lo,
+                                      max(dirty_hi - dirty_lo, 0),
+                                      min_shifted, ranges)
+        return self.last_commit
+
+    @contextlib.contextmanager
+    def transaction(self) -> Iterator["HostTable"]:
+        """Batch several mutations into ONE epoch bump / one BISnp payload."""
+        self.begin()
+        try:
+            yield self
+        except BaseException:
+            self.abort()
+            raise
+
+    def _diff(self, sh: _Buf):
+        """Minimal (dirty_lo, dirty_hi, min_shifted_entry, ranges) between
+        the committed front buffer and the shadow, or None when identical."""
+        n0, n1 = self.n, sh.n
+        m = min(n0, n1)
+        eq = ((self.starts[:m] == sh.starts[:m])
+              & (self.sizes[:m] == sh.sizes[:m])
+              & (self.perms[:m] == sh.perms[:m]).all(axis=1)
+              & (self.meta[:m] == sh.meta[:m]))
+        ne = np.flatnonzero(~eq)
+        if n0 == n1:
+            if ne.size == 0:
+                return None
+            p, j = int(ne[0]), int(ne[-1])
+            lo = min(int(self.starts[p]), int(sh.starts[p]))
+            hi = max(int(self.starts[j] + self.sizes[j]),
+                     int(sh.starts[j] + sh.sizes[j]))
+            # per-run dirty ranges: in-place commits with several disjoint
+            # touched regions must not invalidate the pages between them
+            runs = np.split(ne, np.flatnonzero(np.diff(ne) > 1) + 1)
+            ranges = []
+            if len(runs) <= MAX_DIRTY_RANGES:
+                for run in runs:
+                    a, b = int(run[0]), int(run[-1])
+                    r_lo = min(int(self.starts[a]), int(sh.starts[a]))
+                    r_hi = max(int(self.starts[b] + self.sizes[b]),
+                               int(sh.starts[b] + sh.sizes[b]))
+                    ranges.append((r_lo, max(r_hi - r_lo, 0)))
+            else:
+                ranges.append((lo, max(hi - lo, 0)))
+            return lo, hi, None, tuple(ranges)
+        p = int(ne[0]) if ne.size else m
+        lo_cands = []
+        if p < n0:
+            lo_cands.append(int(self.starts[p]))
+        if p < n1:
+            lo_cands.append(int(sh.starts[p]))
+        lo = min(lo_cands) if lo_cands else 0
+        hi_cands = [lo]
+        if n0 > p:
+            hi_cands.append(int(self.starts[n0 - 1] + self.sizes[n0 - 1]))
+        if n1 > p:
+            hi_cands.append(int(sh.starts[n1 - 1] + sh.sizes[n1 - 1]))
+        hi = max(hi_cands)
+        return lo, hi, p, ((lo, max(hi - lo, 0)),)
+
+    def _mutate(self, fn):
+        """Run `fn(buf) -> (buf, ret)` inside the open transaction, or as an
+        auto-committed single-op transaction."""
+        auto = self._shadow is None
+        if auto:
+            self.begin()
+        try:
+            buf, ret = fn(self._shadow)
+            self._shadow = buf
+        except BaseException:
+            if auto:
+                self.abort()
+            raise
+        if auto:
+            self.commit()
+        return ret
 
     # -- FM operations ------------------------------------------------------
     def insert(self, start: int, n_pages: int, perm_words: np.ndarray,
@@ -169,73 +329,129 @@ class HostTable:
         permission entry if entries' ranges overlap', paper §4.1.1).
 
         Overlapping regions take the OR of permission words (grant union).
-        Returns the index of the (possibly merged) entry containing `start`.
+        Online: only the entries overlapping (or adjacent to) the new range
+        are re-emitted; the sorted tail is spliced with one vectorized move —
+        no full-table rebuild.  Returns the index of the (possibly merged)
+        entry containing `start` (in the buffer being mutated).
         """
         if n_pages <= 0:
             raise ValueError("n_pages must be positive")
-        segs = []  # (start, end, perms, meta) open intervals to re-emit
         new = (start, start + n_pages, perm_words.astype(np.uint32),
                np.uint32(owner_host | (label_idx << 16)))
-        keep = []
-        for i in range(self.n):
-            s, e = int(self.starts[i]), int(self.starts[i] + self.sizes[i])
-            if e <= new[0] or s >= new[1]:
-                keep.append((s, e, self.perms[i].copy(), self.meta[i]))
-            else:
-                # split non-overlapping flanks, OR the overlap
-                if s < new[0]:
-                    keep.append((s, new[0], self.perms[i].copy(), self.meta[i]))
-                if e > new[1]:
-                    keep.append((new[1], e, self.perms[i].copy(), self.meta[i]))
-                lo, hi = max(s, new[0]), min(e, new[1])
-                segs.append((lo, hi, self.perms[i] | new[2], new[3]))
-        # uncovered parts of the new range
-        covered = sorted((lo, hi) for lo, hi, _, _ in segs)
-        cur = new[0]
-        for lo, hi in covered:
-            if cur < lo:
-                segs.append((cur, lo, new[2].copy(), new[3]))
-            cur = max(cur, hi)
-        if cur < new[1]:
-            segs.append((cur, new[1], new[2].copy(), new[3]))
-        allseg = sorted(keep + segs, key=lambda t: t[0])
-        # coalesce adjacent segments with identical permissions
-        merged: list = []
-        for seg in allseg:
-            if merged and merged[-1][1] == seg[0] and \
-                    np.array_equal(merged[-1][2], seg[2]):
-                merged[-1] = (merged[-1][0], seg[1], merged[-1][2], merged[-1][3])
-            else:
-                merged.append(list(seg) if isinstance(seg, tuple) else seg)
-        merged = [tuple(m) for m in merged]
-        if len(merged) > self.capacity:
-            raise RuntimeError("permission table capacity exceeded")
-        self._rewrite(merged)
-        return int(np.searchsorted(self.starts[: self.n], start, side="right") - 1)
+
+        def go(buf: _Buf):
+            n = buf.n
+            ends = buf.starts[:n] + buf.sizes[:n]
+            # window: entries overlapping or exactly adjacent to the new
+            # range (adjacency included so coalescing can see the neighbors)
+            i_lo = int(np.searchsorted(ends, new[0], side="left"))
+            i_hi = int(np.searchsorted(buf.starts[:n], new[1], side="right"))
+            segs, keep = [], []
+            for i in range(i_lo, i_hi):
+                s, e = int(buf.starts[i]), int(buf.starts[i] + buf.sizes[i])
+                if e <= new[0] or s >= new[1]:
+                    keep.append((s, e, buf.perms[i].copy(), buf.meta[i]))
+                else:
+                    # split non-overlapping flanks, OR the overlap
+                    if s < new[0]:
+                        keep.append((s, new[0], buf.perms[i].copy(),
+                                     buf.meta[i]))
+                    if e > new[1]:
+                        keep.append((new[1], e, buf.perms[i].copy(),
+                                     buf.meta[i]))
+                    lo, hi = max(s, new[0]), min(e, new[1])
+                    segs.append((lo, hi, buf.perms[i] | new[2], new[3]))
+            # reclaim tombstones the new range touched (lazy vacuum)
+            keep = [k for k in keep if k[2].any()]
+            # uncovered parts of the new range
+            covered = sorted((lo, hi) for lo, hi, _, _ in segs)
+            cur = new[0]
+            for lo, hi in covered:
+                if cur < lo:
+                    segs.append((cur, lo, new[2].copy(), new[3]))
+                cur = max(cur, hi)
+            if cur < new[1]:
+                segs.append((cur, new[1], new[2].copy(), new[3]))
+            merged = _coalesce(sorted(keep + segs, key=lambda t: t[0]))
+            buf = _splice(buf, i_lo, i_hi, merged, self.capacity)
+            ret = int(np.searchsorted(buf.starts[:buf.n], start,
+                                      side="right") - 1)
+            return buf, ret
+
+        return self._mutate(go)
 
     def remove_hwpid(self, hwpid: int) -> None:
-        """Revocation: clear a HWPID's bits everywhere; drop empty entries
-        (FM auto-cleans entries with no hosts, paper §4.1.3)."""
-        mask = ~(np.uint32(3) << np.uint32((hwpid % 16) * 2))
-        self.perms[: self.n, hwpid // 16] &= mask
-        live = [
-            (int(self.starts[i]), int(self.starts[i] + self.sizes[i]),
-             self.perms[i].copy(), self.meta[i])
-            for i in range(self.n) if self.perms[i].any()
-        ]
-        self._rewrite(live)
+        """Revocation: clear a HWPID's bits everywhere, in place.
 
-    def _rewrite(self, segs) -> None:
-        self.starts[:] = EMPTY_START
-        self.sizes[:] = 0
-        self.perms[:] = 0
-        self.meta[:] = 0
-        for i, (s, e, p, m) in enumerate(segs):
-            self.starts[i] = s
-            self.sizes[i] = e - s
-            self.perms[i] = p
-            self.meta[i] = m
-        self.n = len(segs)
+        Entries left with no grants become TOMBSTONES (zero perm words) so
+        every surviving entry keeps its index — the commit diff then carries
+        only the revoked tenant's own page ranges and no index shift, which
+        is what lets host permission caches invalidate *only* that tenant's
+        mappings (paper §4.1.3 targeted BISnp).  Tombstones still deny (a
+        zero perm field fails every `need`) and are reclaimed lazily by
+        overlapping inserts or an explicit `vacuum()`."""
+        mask = ~(np.uint32(3) << np.uint32((hwpid % 16) * 2))
+
+        def go(buf: _Buf):
+            buf.perms[:buf.n, hwpid // 16] &= mask
+            return buf, None
+
+        self._mutate(go)
+
+    def vacuum(self) -> None:
+        """Compact the table: drop tombstoned entries and coalesce adjacent
+        identical survivors.  Shifts indices (the commit reports
+        ``min_shifted_entry``), so run it as deliberate maintenance, not on
+        every revoke — the FM auto-cleans 'entries with no hosts' (paper
+        §4.1.3) at this boundary."""
+        def go(buf: _Buf):
+            n = buf.n
+            live = buf.perms[:n].any(axis=1)
+            segs = [(int(buf.starts[i]), int(buf.starts[i] + buf.sizes[i]),
+                     buf.perms[i].copy(), buf.meta[i])
+                    for i in np.flatnonzero(live)]
+            return _splice(buf, 0, n, _coalesce(segs), self.capacity), None
+
+        self._mutate(go)
+
+    def revoke_range(self, start: int, n_pages: int, hwpid: int) -> None:
+        """Targeted revocation: clear one HWPID's bits only inside
+        ``[start, start + n_pages)``, splitting boundary entries and dropping
+        segments left with no grants — the online partial-release path
+        (region release without touching the tenant's other grants)."""
+        if n_pages <= 0:
+            raise ValueError("n_pages must be positive")
+        lo_pg, hi_pg = start, start + n_pages
+        shift = np.uint32((hwpid % 16) * 2)
+        mask = ~(np.uint32(3) << shift)
+
+        def go(buf: _Buf):
+            n = buf.n
+            ends = buf.starts[:n] + buf.sizes[:n]
+            # strict-overlap window, widened by 1 so coalescing sees neighbors
+            i_lo = int(np.searchsorted(ends, lo_pg, side="right"))
+            i_hi = int(np.searchsorted(buf.starts[:n], hi_pg, side="left"))
+            w_lo, w_hi = max(i_lo - 1, 0), min(i_hi + 1, n)
+            segs = []
+            for i in range(w_lo, w_hi):
+                s, e = int(buf.starts[i]), int(buf.starts[i] + buf.sizes[i])
+                if e <= lo_pg or s >= hi_pg:
+                    segs.append((s, e, buf.perms[i].copy(), buf.meta[i]))
+                    continue
+                if s < lo_pg:
+                    segs.append((s, lo_pg, buf.perms[i].copy(), buf.meta[i]))
+                cleared = buf.perms[i].copy()
+                cleared[hwpid // 16] &= mask
+                # fully-cleared segments become tombstones (index-stable
+                # whole-entry release); see remove_hwpid
+                segs.append((max(s, lo_pg), min(e, hi_pg), cleared,
+                             buf.meta[i]))
+                if e > hi_pg:
+                    segs.append((hi_pg, e, buf.perms[i].copy(), buf.meta[i]))
+            merged = _coalesce(segs)
+            return _splice(buf, w_lo, w_hi, merged, self.capacity), None
+
+        self._mutate(go)
 
     def tile_summary(self, *, tile: int = SUMMARY_TILE,
                      n_tiles: int | None = None):
@@ -247,12 +463,15 @@ class HostTable:
 
     # -- export to device ----------------------------------------------------
     def to_device(self) -> PermissionTable:
+        """Snapshot the COMMITTED buffer (mid-transaction readers never see
+        shadow state — that is the point of the double buffer)."""
         return PermissionTable(
             starts=jnp.asarray(self.starts),
             sizes=jnp.asarray(self.sizes),
             perms=jnp.asarray(self.perms),
             meta=jnp.asarray(self.meta),
             n=jnp.asarray(self.n, jnp.int32),
+            epoch=self.epoch,
         )
 
     def check_invariants(self) -> None:
@@ -262,3 +481,43 @@ class HostTable:
         assert np.all(e[:-1] <= s[1:]), "entries overlap"
         assert np.all(self.sizes[: self.n] > 0), "empty live entry"
         assert np.all(self.starts[self.n:] == EMPTY_START)
+
+
+def _coalesce(segs):
+    """Merge adjacent (start, end, perms, meta) segments with identical
+    permission words.  Tombstones (all-zero perms) are never merged — they
+    hold their index so revocation commits stay index-stable."""
+    merged: list = []
+    for seg in segs:
+        if merged and merged[-1][1] == seg[0] and seg[2].any() and \
+                np.array_equal(merged[-1][2], seg[2]):
+            merged[-1] = (merged[-1][0], seg[1], merged[-1][2], merged[-1][3])
+        else:
+            merged.append(seg)
+    return merged
+
+
+def _splice(buf: _Buf, i_lo: int, i_hi: int, segs, capacity: int) -> _Buf:
+    """Replace entries [i_lo, i_hi) with `segs`, shifting the sorted tail
+    with one vectorized move per array (work ∝ window + tail, not table)."""
+    n = buf.n
+    k_new = len(segs)
+    n2 = n - (i_hi - i_lo) + k_new
+    if n2 > capacity:
+        raise RuntimeError("permission table capacity exceeded")
+    tail = slice(i_lo + k_new, n2)
+    buf.starts[tail] = buf.starts[i_hi:n].copy()
+    buf.sizes[tail] = buf.sizes[i_hi:n].copy()
+    buf.perms[tail] = buf.perms[i_hi:n].copy()
+    buf.meta[tail] = buf.meta[i_hi:n].copy()
+    for j, (s, e, p, m) in enumerate(segs):
+        i = i_lo + j
+        buf.starts[i] = s
+        buf.sizes[i] = e - s
+        buf.perms[i] = p
+        buf.meta[i] = m
+    buf.starts[n2:] = EMPTY_START
+    buf.sizes[n2:] = 0
+    buf.perms[n2:] = 0
+    buf.meta[n2:] = 0
+    return buf._replace(n=n2)

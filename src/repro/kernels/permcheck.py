@@ -38,13 +38,15 @@ paper's table-in-SDM with per-host checkers.
 from __future__ import annotations
 
 import functools
+from typing import Callable, Hashable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.table import HWPID_SHIFT, PAGE_MASK, SUMMARY_TILE, tile_summary
+from repro.core.table import (HWPID_SHIFT, PAGE_MASK, SUMMARY_TILE,
+                              tenant_permbits, tile_summary)
 from repro.kernels import bucket_pad, resolve_interpret
 
 ADDR_BLOCK = 1024          # addresses per grid step = (8, 128) lanes
@@ -52,6 +54,81 @@ ENTRY_TILE = 1024          # table entries folded per inner loop step
 MAX_ENTRIES = 65536        # per-shard ceiling (64 K entries, 768 KiB VMEM)
 
 assert ENTRY_TILE == SUMMARY_TILE, "kernel tile must match table summary tile"
+
+
+# ---------------------------------------------------------------------------
+# Epoch-stamped shard views
+# ---------------------------------------------------------------------------
+# The kernel operands (padded entry arrays + tile summary + per-tenant
+# permbits) are derived data: rebuilding them on every call costs host-side
+# dispatch work that dwarfs the kernel itself for small batches.  A
+# `ShardView` snapshots them together with the table epoch they were derived
+# at; `ShardViewCache` memoizes views per tenant and re-resolves whenever the
+# FM commits a new epoch — the kernel-layer leg of the BISnp story: a
+# stale-epoch batch never runs against stale operands, it rebuilds them.
+
+class ShardView(NamedTuple):
+    """Padded, summary-annotated table shard for one tenant at one epoch."""
+    starts: jax.Array     # i32[padded_n], tail = INT32_MAX sentinels
+    ends: jax.Array       # i32[padded_n]
+    permbits: jax.Array   # u32[padded_n] 2-bit field for the view's tenant
+    tile_min: jax.Array   # i32[n_tiles]
+    tile_max: jax.Array   # i32[n_tiles]
+    epoch: jax.Array | int = 0
+
+    @property
+    def n_tiles(self) -> int:
+        return self.tile_min.shape[0]
+
+
+def make_shard_view(starts, ends, permbits, *, epoch: int = 0) -> ShardView:
+    """Pad a raw shard and precompute its tile summary, stamped with the
+    table epoch the arrays were read at."""
+    s, e, pb, np_ = _pad_shard(starts, ends, permbits)
+    tmin, tmax = tile_summary(s, e, tile=ENTRY_TILE, n_tiles=np_ // ENTRY_TILE)
+    return ShardView(s, e, pb, tmin, tmax, epoch)
+
+
+def table_shard_view(table, hwpid: int, *,
+                     cache: "ShardViewCache | None" = None) -> ShardView:
+    """ShardView of a device `PermissionTable` for one tenant; with a
+    `ShardViewCache` the padded arrays and summary are reused until the
+    table's epoch moves."""
+    epoch = int(table.epoch)
+
+    def build() -> ShardView:
+        return make_shard_view(table.starts, table.starts + table.sizes,
+                               tenant_permbits(table, hwpid), epoch=epoch)
+
+    if cache is None:
+        return build()
+    return cache.get(hwpid, epoch, build)
+
+
+class ShardViewCache:
+    """Epoch-keyed host-side memo: one ShardView per key (typically the
+    tenant HWPID).  `get` returns the cached view while the epoch matches
+    and transparently re-resolves after an FM commit bumps it — counters
+    expose how much derivation work churn actually caused."""
+
+    def __init__(self):
+        self._views: dict[Hashable, ShardView] = {}
+        self.rebuilds = 0
+        self.reuses = 0
+
+    def get(self, key: Hashable, epoch: int,
+            build: Callable[[], ShardView]) -> ShardView:
+        view = self._views.get(key)
+        if view is not None and int(view.epoch) == int(epoch):
+            self.reuses += 1
+            return view
+        view = build()
+        self._views[key] = view
+        self.rebuilds += 1
+        return view
+
+    def drop(self, key: Hashable) -> None:
+        self._views.pop(key, None)
 
 
 def _match_tile(page, starts_ref, ends_ref, permbits_ref, t, needv, carry):
@@ -171,15 +248,16 @@ def _pad_shard(starts, ends, permbits):
 
 @functools.partial(jax.jit,
                    static_argnames=("hwpid", "need", "interpret", "mode"))
-def permcheck_pallas(ext_addrs, starts, ends, permbits, *, hwpid: int,
-                     need: int, interpret: bool | None = None,
-                     mode: str = "hier"):
-    """Blocked Pallas permission check.
+def permcheck_view_pallas(ext_addrs, view: ShardView, *, hwpid: int,
+                          need: int, interpret: bool | None = None,
+                          mode: str = "hier"):
+    """Blocked Pallas permission check over a prepared `ShardView`.
 
-    Pads B to a power-of-two multiple of ADDR_BLOCK and N likewise to
-    ENTRY_TILE (bucketed padding -> varying batch sizes reuse jit caches);
-    padding entries use INT32_MAX sentinels (never match).  ``interpret=None``
-    auto-selects: compiled on TPU, interpreter elsewhere.
+    The view's entry arrays are already padded and summarized (see
+    `make_shard_view` / `table_shard_view`), so repeated batches at one
+    epoch skip all operand derivation.  Pads B to a power-of-two multiple
+    of ADDR_BLOCK (bucketed -> varying batch sizes reuse jit caches).
+    ``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere.
     """
     if mode not in ("hier", "flat"):
         raise ValueError(f"unknown permcheck mode {mode!r}")
@@ -188,7 +266,8 @@ def permcheck_pallas(ext_addrs, starts, ends, permbits, *, hwpid: int,
     bp = bucket_pad(b, ADDR_BLOCK)
     ext = jnp.full((bp,), -1, jnp.int32).at[:b].set(
         jnp.asarray(ext_addrs, jnp.int32))
-    s, e, pb, np_ = _pad_shard(starts, ends, permbits)
+    s, e, pb = view.starts, view.ends, view.permbits
+    np_ = s.shape[0]
 
     grid = (bp // ADDR_BLOCK,)
     entry_specs = [
@@ -210,11 +289,10 @@ def permcheck_pallas(ext_addrs, starts, ends, permbits, *, hwpid: int,
         operands = (ext, s, e, pb)
         in_specs = [pl.BlockSpec((ADDR_BLOCK,), lambda i: (i,))] + entry_specs
     else:
-        n_tiles = np_ // ENTRY_TILE
-        tmin, tmax = tile_summary(s, e, tile=ENTRY_TILE, n_tiles=n_tiles)
+        n_tiles = view.n_tiles
         kernel = functools.partial(_permcheck_hier_kernel, hwpid=hwpid,
                                    need=need, n_entries=np_)
-        operands = (ext, s, e, pb, tmin, tmax)
+        operands = (ext, s, e, pb, view.tile_min, view.tile_max)
         in_specs = ([pl.BlockSpec((ADDR_BLOCK,), lambda i: (i,))] +
                     entry_specs +
                     [pl.BlockSpec((n_tiles,), lambda i: (0,)),
@@ -229,3 +307,19 @@ def permcheck_pallas(ext_addrs, starts, ends, permbits, *, hwpid: int,
         interpret=interpret,
     )(*operands)
     return allowed[:b].astype(bool), idx[:b]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("hwpid", "need", "interpret", "mode"))
+def permcheck_pallas(ext_addrs, starts, ends, permbits, *, hwpid: int,
+                     need: int, interpret: bool | None = None,
+                     mode: str = "hier"):
+    """Raw-array convenience wrapper: derives a ShardView per call (padding
+    entries use INT32_MAX sentinels that never match) and runs
+    `permcheck_view_pallas`.  Jitted so the derivation traces into the
+    call's graph (no eager per-call dispatch); epoch-aware callers should
+    still hold a `ShardViewCache` and use the view entry point, which
+    skips the derivation entirely across batches."""
+    return permcheck_view_pallas(
+        ext_addrs, make_shard_view(starts, ends, permbits),
+        hwpid=hwpid, need=need, interpret=interpret, mode=mode)

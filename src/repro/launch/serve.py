@@ -1,5 +1,5 @@
-"""Serving launcher: batched multi-tenant decode with Space-Control-guarded
-KV pages.
+"""Serving launcher: continuous-batching multi-tenant decode with
+Space-Control-guarded KV pages and a live tenant lifecycle.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --preset smoke --requests 8 --prompt-len 32 --gen 16
@@ -9,14 +9,25 @@ The engine demonstrates the paper's serving-side integration end to end:
   * each tenant's KV cache block is registered as a region of the shared
     tensor pool (SDM pages) and granted RW only to that tenant's HWPID;
   * every decode step's KV-page touch set is validated through the
-    permission checker before the step commits (egress enforcement) — a
-    fault aborts the request batch, not the engine;
-  * mid-run revocation (FM BISnp) kills a tenant's decoding immediately
-    while other tenants continue — the isolation property, live.
+    epoch-fenced permission cache (`cached_check_access`) before the step
+    commits (egress enforcement) — a fault aborts that tenant's in-flight
+    requests, not the engine and not other tenants;
+  * the engine's PermCache is wired to the FM's BISnp broadcasts
+    (`invalidate_perm_cache`): a committed grant/revoke drops exactly the
+    dirty page ranges, so surviving tenants keep their all-hit fast path
+    across churn;
+  * tenants are admitted and evicted live: eviction releases the KV page
+    span back to the pool free list, revokes the grants in ONE FM
+    transaction (one epoch bump / BISnp), and returns the HWPID;
+  * mid-run revocation (FM BISnp) kills a tenant's decoding at its very
+    next KV-page touch while other tenants continue — the isolation
+    property, live.
 
-Batching: requests are grouped per tenant into fixed-size decode batches
-(continuous-batching-lite: a finished request's slot is refilled from the
-tenant's queue each step).
+Batching: the engine interleaves all tenants each `step()` (continuous
+batching at tenant-group granularity): every active tenant decodes one
+token per engine step, finished request groups retire and their slots
+refill from the tenant's queue, and tenants can join or leave between any
+two steps.
 """
 from __future__ import annotations
 
@@ -35,11 +46,14 @@ from repro.core import (
     PERM_RW,
     Proposal,
     SharedTensorPool,
-    check_access,
+    invalidate_perm_cache,
     make_hwpid_local,
     pack_ext_addr,
 )
+from repro.core.checker import cached_check_access_jit, make_perm_cache
 from repro.core.table import PAGE_BYTES
+from repro.kernels.memcrypt import checked_memcrypt_view_pallas
+from repro.kernels.permcheck import ShardViewCache, table_shard_view
 from repro.models import registry
 
 
@@ -48,21 +62,39 @@ class Tenant:
     name: str
     hwpid: int
     host_id: int
+    hwpid_local: jax.Array
     queue: list = field(default_factory=list)   # prompt arrays
     done: list = field(default_factory=list)    # (prompt, generated)
+    aborted: list = field(default_factory=list)  # prompts killed in flight
     kv_start_page: int = 0
     kv_n_pages: int = 0
     revoked: bool = False
+    # in-flight decode group (continuous-batching slot state)
+    group: list | None = None
+    cache: object = None
+    cur: jax.Array | None = None
+    out: list | None = None
+    plen: int = 0
+    pos: int = 0
+    gen_left: int = 0
+    last_fault: int = FAULT_NONE
 
 
 class ServeEngine:
-    """Multi-tenant batched decode with per-step KV-page permission checks."""
+    """Continuous-batching multi-tenant decode with per-step KV-page
+    permission checks against an epoch-fenced, BISnp-wired PermCache."""
 
-    def __init__(self, cfg, params, *, batch: int, cap: int):
+    def __init__(self, cfg, params, *, batch: int, cap: int,
+                 fused_egress: bool = False):
         self.cfg = cfg
         self.params = params
         self.batch = batch
         self.cap = cap
+        # optional: pull each step's KV lines through the fused Pallas
+        # check⊕decrypt kernel (device-level egress) on top of the cached
+        # framework check; epoch-stamped shard views re-resolve on churn
+        self.fused_egress = fused_egress
+        self.shard_views = ShardViewCache()
         self.pool = SharedTensorPool()
         self.fm = FabricManager(sdm_pages=1 << 20, table_capacity=8192)
         self.tenants: dict[str, Tenant] = {}
@@ -70,28 +102,72 @@ class ServeEngine:
             lambda p, c, t, pos: registry.decode_step(cfg, p, c, t, pos))
         self.faults = 0
         self.steps = 0
+        self.bisnp_events = 0
+        # the host-side permission cache, kept honest by FM back-invalidates
+        self.permcache = make_perm_cache(epoch=self.fm.epoch)
+        self.fm.on_bisnp(self._on_bisnp)
+        self._table_dev = self.fm.table.to_device()
+
+    # -- BISnp wiring ----------------------------------------------------------
+    def _on_bisnp(self, ev) -> None:
+        """FM back-invalidate: targeted PermCache drop + epoch advance (the
+        device table snapshot is re-exported lazily on next use)."""
+        self.bisnp_events += 1
+        self.permcache = invalidate_perm_cache(
+            self.permcache, ev.start_page, ev.n_pages, ev.epoch,
+            min_shifted_entry=ev.min_entry_idx)
+
+    def _table(self):
+        if int(self._table_dev.epoch) != self.fm.epoch:
+            self._table_dev = self.fm.table.to_device()
+        return self._table_dev
 
     # -- tenancy ---------------------------------------------------------------
     def add_tenant(self, name: str, host_id: int) -> Tenant:
+        """Admission: allocate a KV page span (reusing evicted tenants'
+        pages), grant it RW to a fresh HWPID, and join the serving loop."""
+        if name in self.tenants:
+            raise ValueError(f"tenant {name} already admitted")
         eng = self.fm.hosts.get(host_id) or self.fm.enroll_host(host_id)
         hwpid = eng.get_next_pid()
-        # reserve the tenant's KV page range in the shared pool address space
         kv_bytes = self.batch * self.cap * 64  # page-accounting granularity
         n_pages = max(1, -(-kv_bytes // PAGE_BYTES))
-        start = self.pool.total_pages + 1
         region = self.pool.register(
-            f"kv:{name}", jnp.zeros((n_pages, PAGE_BYTES // 4), jnp.float32))
+            f"kv:{name}",
+            jnp.zeros((n_pages, PAGE_BYTES // 4), jnp.float32))
         label = self.fm.propose(Proposal(
             host_id, hwpid, base_p=hash(name) & 0xFFFF,
             start_page=region.start_page, n_pages=region.n_pages,
             perm=PERM_RW))
         assert label is not None
-        t = Tenant(name, hwpid, host_id, kv_start_page=region.start_page,
+        t = Tenant(name, hwpid, host_id, make_hwpid_local([hwpid]),
+                   kv_start_page=region.start_page,
                    kv_n_pages=region.n_pages)
         self.tenants[name] = t
         return t
 
+    def evict_tenant(self, name: str) -> Tenant:
+        """Eviction: abort in-flight work, revoke every grant and release
+        the KV span in ONE FM transaction (one epoch bump, one targeted
+        BISnp batch), return pages to the pool free list and the HWPID to
+        the deployment pool."""
+        t = self.tenants.pop(name)
+        if t.group is not None:
+            t.aborted += t.group
+            t.group = None
+        t.queue.clear()
+        with self.fm.transaction():
+            self.fm.release_range(t.hwpid, t.kv_start_page, t.kv_n_pages)
+            self.fm.revoke_hwpid(t.hwpid)   # belt-and-braces for reuse
+        self.pool.unregister(f"kv:{name}")
+        self.fm.hosts[t.host_id].release_pid(t.hwpid)
+        t.revoked = True
+        return t
+
     def revoke(self, name: str) -> None:
+        """Mid-flight revocation: the FM drops the tenant's grants and
+        broadcasts the BISnp; the tenant's next KV-page touch faults and
+        aborts only its requests (they stay admitted, but powerless)."""
         self.fm.revoke_hwpid(self.tenants[name].hwpid)
         self.tenants[name].revoked = True
 
@@ -99,54 +175,131 @@ class ServeEngine:
         self.tenants[name].queue.append(prompt)
 
     # -- the serving loop --------------------------------------------------------
-    def _kv_pages_for_step(self, t: Tenant, pos: int) -> jax.Array:
-        """Pages the decode step writes (one KV line per active slot)."""
-        off = (pos * 64) % (t.kv_n_pages * PAGE_BYTES)
-        return jnp.asarray([t.kv_start_page + off // PAGE_BYTES],
-                           jnp.int32)
+    def _kv_pages_for_step(self, t: Tenant) -> jax.Array:
+        """Pages this step's KV writes touch (one line per active slot)."""
+        b = max(len(t.group or ()), 1)
+        off = (t.pos * b + np.arange(b)) * 64 % (t.kv_n_pages * PAGE_BYTES)
+        return jnp.asarray(t.kv_start_page + off // PAGE_BYTES, jnp.int32)
+
+    def _start_group(self, t: Tenant, gen: int) -> None:
+        group = [t.queue.pop(0) for _ in range(
+            min(self.batch, len(t.queue)))]
+        plen = max(len(p) for p in group)
+        toks = np.full((self.batch, plen), 2, np.int32)
+        for i, p in enumerate(group):
+            toks[i, :len(p)] = p
+        logits, cache = registry.prefill(
+            self.cfg, self.params, {"tokens": jnp.asarray(toks)},
+            cache_dtype=jnp.float32, cap=plen + gen)
+        t.group = group
+        t.cache = cache
+        t.out = [list(p) for p in group]
+        t.cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        t.plen = plen
+        t.pos = plen
+        t.gen_left = gen
+
+    def _abort_group(self, t: Tenant, fault: int) -> None:
+        self.faults += 1
+        t.last_fault = fault
+        t.aborted += t.group
+        t.group = None
+        t.cache = None
+
+    def step(self, *, gen: int, only: str | None = None) -> dict:
+        """One engine tick: every tenant with work decodes one token.
+
+        Returns {tenant: {"aborted": bool, "fault": int, "retired": int}}
+        for tenants that made progress this tick.
+        """
+        results: dict[str, dict] = {}
+        table = self._table()
+        for name, t in list(self.tenants.items()):
+            if only is not None and name != only:
+                continue
+            if t.group is None:
+                if not t.queue:
+                    continue
+                self._start_group(t, gen)
+            # --- Space-Control egress check on this step's KV touch set ---
+            pages = self._kv_pages_for_step(t)
+            ext = pack_ext_addr(
+                jnp.full(pages.shape, t.hwpid, jnp.int32), pages)
+            chk, self.permcache = cached_check_access_jit(
+                table, t.hwpid_local, ext, jnp.ones(pages.shape, bool),
+                self.permcache)
+            if self.fused_egress:
+                # device-level egress: decrypt-read one word per touched KV
+                # line through the fused check⊕memcrypt kernel; the shard
+                # view re-resolves exactly once per FM epoch bump
+                view = table_shard_view(table, t.hwpid,
+                                        cache=self.shard_views)
+                words = jnp.zeros(pages.shape, jnp.uint32)
+                _, kfault = checked_memcrypt_view_pallas(
+                    words, ext, view, hwpid=t.hwpid, need=2,
+                    key0=0xAB, key1=0xCD)
+                if not bool(jnp.all((kfault > 0) == ~chk.allowed)):
+                    raise AssertionError(
+                        "fused kernel and cached checker disagree")
+            if not bool(chk.allowed.all()):
+                # response-side enforcement: the denied KV lines read as
+                # zero and the tenant's in-flight group aborts
+                fault = int(np.asarray(chk.fault).max())
+                self._abort_group(t, fault)
+                results[name] = {"aborted": True, "fault": fault,
+                                 "retired": 0}
+                continue
+            logits, t.cache = self._decode(
+                self.params, t.cache, t.cur,
+                jnp.asarray(t.pos, jnp.int32))
+            t.cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(
+                jnp.int32)
+            for i in range(len(t.group)):
+                t.out[i].append(int(t.cur[i, 0]))
+            t.pos += 1
+            t.gen_left -= 1
+            self.steps += 1
+            retired = 0
+            if t.gen_left == 0:
+                t.done += [(g, o[len(g):])
+                           for g, o in zip(t.group, t.out)]
+                retired = len(t.group)
+                t.group = None
+                t.cache = None
+            results[name] = {"aborted": False, "fault": FAULT_NONE,
+                             "retired": retired}
+        return results
+
+    def has_work(self, only: str | None = None) -> bool:
+        for name, t in self.tenants.items():
+            if only is not None and name != only:
+                continue
+            if t.queue or t.group is not None:
+                return True
+        return False
+
+    def run(self, *, gen: int, max_steps: int | None = None) -> dict:
+        """Drive the continuous loop until every queue drains (or
+        max_steps).  Returns per-tenant retirement/abort counts."""
+        ticks = 0
+        while self.has_work() and (max_steps is None or ticks < max_steps):
+            self.step(gen=gen)
+            ticks += 1
+        return {name: {"served": len(t.done), "aborted": len(t.aborted)}
+                for name, t in self.tenants.items()}
 
     def run_tenant(self, name: str, gen: int) -> dict:
-        """Decode all queued prompts for one tenant, `gen` tokens each."""
+        """Decode all queued prompts for one tenant, `gen` tokens each
+        (single-tenant drain of the continuous loop)."""
         t = self.tenants[name]
-        cfg = self.cfg
-        table = self.fm.table.to_device()
-        local = make_hwpid_local([t.hwpid])
-        served = 0
-        while t.queue:
-            group = [t.queue.pop(0) for _ in range(
-                min(self.batch, len(t.queue)))]
-            b = len(group)
-            plen = max(len(p) for p in group)
-            toks = np.full((self.batch, plen), 2, np.int32)
-            for i, p in enumerate(group):
-                toks[i, :len(p)] = p
-            logits, cache = registry.prefill(
-                cfg, self.params, {"tokens": jnp.asarray(toks)},
-                cache_dtype=jnp.float32, cap=plen + gen)
-            out = [list(p) for p in group]
-            cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-            for step in range(gen):
-                pos = plen + step
-                # --- Space-Control egress check on this step's KV pages ---
-                pages = self._kv_pages_for_step(t, pos)
-                chk = check_access(
-                    table, local,
-                    pack_ext_addr(jnp.full(pages.shape, t.hwpid), pages),
-                    jnp.ones(pages.shape, bool))
-                if not bool(chk.allowed.all()):
-                    self.faults += int((~chk.allowed).sum())
-                    return {"tenant": name, "served": served,
-                            "aborted": True, "fault": int(chk.fault[0])}
-                logits, cache = self._decode(
-                    self.params, cache, cur, jnp.asarray(pos, jnp.int32))
-                cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(
-                    jnp.int32)
-                for i in range(b):
-                    out[i].append(int(cur[i, 0]))
-                self.steps += 1
-            t.done += [(g, o[len(g):]) for g, o in zip(group, out)]
-            served += b
-        return {"tenant": name, "served": served, "aborted": False}
+        served0 = len(t.done)
+        while self.has_work(only=name):
+            out = self.step(gen=gen, only=name).get(name)
+            if out and out["aborted"]:
+                return {"tenant": name, "served": len(t.done) - served0,
+                        "aborted": True, "fault": out["fault"]}
+        return {"tenant": name, "served": len(t.done) - served0,
+                "aborted": False}
 
 
 def main() -> None:
@@ -173,14 +326,13 @@ def main() -> None:
         engine.submit(who, rng.integers(3, cfg.vocab - 1, args.prompt_len))
 
     t0 = time.time()
-    ra = engine.run_tenant("tenant-a", args.gen)
-    rb = engine.run_tenant("tenant-b", args.gen)
+    res = engine.run(gen=args.gen)
     dt = time.time() - t0
-    print(f"tenant-a: {ra}")
-    print(f"tenant-b: {rb}")
+    print(f"continuous run: {res}")
     tok = engine.steps * args.batch
     print(f"{engine.steps} decode steps, ~{tok/dt:,.0f} tok/s, "
-          f"faults={engine.faults}")
+          f"faults={engine.faults}, bisnp={engine.bisnp_events}, "
+          f"perm-cache hit rate {engine.permcache.hit_rate:.2f}")
 
     # live revocation: tenant-a loses access mid-service
     engine.submit("tenant-a", rng.integers(3, cfg.vocab - 1, args.prompt_len))
@@ -188,6 +340,17 @@ def main() -> None:
     ra2 = engine.run_tenant("tenant-a", args.gen)
     assert ra2["aborted"], "revoked tenant must fault at the KV egress check"
     print(f"after revocation: {ra2} (isolation enforced)")
+
+    # churn: evict the revoked tenant, admit a replacement reusing its pages
+    evicted = engine.evict_tenant("tenant-a")
+    fresh = engine.add_tenant("tenant-c", host_id=0)
+    print(f"evicted {evicted.name} (pages [{evicted.kv_start_page},"
+          f"+{evicted.kv_n_pages})); admitted {fresh.name} at "
+          f"[{fresh.kv_start_page},+{fresh.kv_n_pages})")
+    engine.submit("tenant-c", rng.integers(3, cfg.vocab - 1, args.prompt_len))
+    rc = engine.run_tenant("tenant-c", args.gen)
+    assert not rc["aborted"]
+    print(f"replacement tenant served: {rc}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,272 @@
+"""Adversarial conformance suite: the §5.1 attack scenarios as executable
+tests against the LIVE control plane (epoch-versioned table + BISnp-wired
+permission cache).
+
+Every test plays an attacker move — forged labels, replayed counters,
+cross-host HWPID aliasing, stale-cache races around revocation, replayed or
+dropped BISnp events — and asserts the access faults (denied verdict,
+zero-filled lanes) while innocent tenants keep running.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FAULT_NOT_LOCAL,
+    FabricManager,
+    PERM_RW,
+    Proposal,
+    SharedTensorPool,
+    check_access,
+    checked_gather,
+    hmac_label,
+    invalidate_perm_cache,
+    make_hwpid_local,
+    pack_ext_addr,
+    tenant_permbits,
+)
+from repro.core.checker import cached_check_access_jit, make_perm_cache
+from repro.core.space import RING_USER
+from repro.kernels.memcrypt import checked_memcrypt_view_pallas
+from repro.kernels.permcheck import ShardViewCache, table_shard_view
+
+
+def _system(n_hosts=2):
+    fm = FabricManager(sdm_pages=1 << 16, table_capacity=4096)
+    return fm, [fm.enroll_host(i) for i in range(n_hosts)]
+
+
+def _wired_cache(fm):
+    """A PermCache kept honest by the FM's BISnp broadcasts."""
+    holder = {"cache": make_perm_cache(epoch=fm.epoch)}
+    fm.on_bisnp(lambda ev: holder.update(cache=invalidate_perm_cache(
+        holder["cache"], ev.start_page, ev.n_pages, ev.epoch,
+        min_shifted_entry=ev.min_entry_idx)))
+    return holder
+
+
+# ---------------------------------------------------------------------------
+# forged labels
+# ---------------------------------------------------------------------------
+
+def test_forged_hmac_label_fails_attestation():
+    """A label minted with an attacker key (or plain made up) never passes
+    the L_exp recomputation, for any field combination the attacker picks."""
+    fm, (h0, _) = _system()
+    hwpid = h0.get_next_pid()
+    fm.propose(Proposal(0, hwpid, 9, 0, 8, PERM_RW))
+    assert h0.verify_lexp(hwpid, 9, fm.k_fm, 0, 8)
+    # forged with a different key
+    forged = hmac_label(b"attacker-key-0001", 0, hwpid, 9, (0 << 24) | 8)
+    h0.install_lexp(hwpid, 9, forged, (64, 8))
+    assert not h0.verify_lexp(hwpid, 9, fm.k_fm, 64, 8)
+    # forged for a different range than granted
+    real = hmac_label(fm.k_fm, 0, hwpid, 9, (0 << 24) | 8)
+    h0.install_lexp(hwpid, 9, real, (0, 16))   # label says 8 pages, not 16
+    assert not h0.verify_lexp(hwpid, 9, fm.k_fm, 0, 16)
+
+
+def test_forged_label_without_grant_cannot_tag():
+    """Installing garbage labels for an unregistered context does not let
+    it validate and emit A-bits."""
+    fm, (h0, _) = _system()
+    h0.install_lexp(77, 0xBAD, label=0xDEADBEEF, pages=(0, 4))
+    h0.context_switch(0, 77, 0xBAD)
+    h0.arm_label(0, ring=RING_USER)
+    # the context armed against a forged L_exp still yields A-bits, but the
+    # FM never committed a grant for HWPID 77 — the checker denies
+    table = fm.table.to_device()
+    ext = pack_ext_addr(jnp.asarray([h0.current_hwpid(0)]),
+                        jnp.asarray([2]))
+    r = check_access(table, make_hwpid_local([77]), ext,
+                     jnp.asarray([False]))
+    assert not bool(r.allowed[0])
+
+
+# ---------------------------------------------------------------------------
+# replayed monotonic counters
+# ---------------------------------------------------------------------------
+
+def test_replayed_label_rejected_after_context_switch():
+    """L_host is bound to the per-activation monotonic counter (Eq. 2): a
+    captured label replayed after ANY later activation no longer matches
+    the recomputation, so replay across context switches is dead."""
+    fm, (h0, _) = _system()
+    hwpid = h0.get_next_pid()
+    fm.propose(Proposal(0, hwpid, 7, 0, 16, PERM_RW))
+    h0.context_switch(0, hwpid, 7)
+    assert h0.arm_label(0, ring=RING_USER)
+    captured = h0.cores[0].label_register          # attacker snapshots this
+    # victim (or attacker) causes another activation: counter advances
+    h0.context_switch(0, hwpid, 7)
+    assert h0.arm_label(0, ring=RING_USER)
+    fresh = h0.cores[0].label_register
+    assert captured != fresh
+    # a verifier recomputing L_host at the current counter rejects the replay
+    current = hmac_label(h0._k_host, 7, hwpid, h0._ctr)
+    assert fresh == current
+    assert captured != current
+
+
+def test_replayed_bisnp_event_cannot_resurrect_grants():
+    """Replaying an OLD BISnp event (stale epoch) against a wired cache
+    must not roll the fence back or revive dropped mappings."""
+    fm, (h0, _) = _system()
+    pid = h0.get_next_pid()
+    fm.propose(Proposal(0, pid, 1, 100, 50, PERM_RW))
+    events = []
+    fm.on_bisnp(events.append)
+    holder = _wired_cache(fm)
+    local = make_hwpid_local([pid])
+    ext = pack_ext_addr(jnp.full((50,), pid), jnp.arange(100, 150))
+    wr = jnp.zeros((50,), bool)
+    table = fm.table.to_device()
+    r, holder["cache"] = cached_check_access_jit(table, local, ext, wr,
+                                                 holder["cache"])
+    assert bool(np.asarray(r.allowed).all())
+    fm.revoke_hwpid(pid)
+    table2 = fm.table.to_device()
+    # adversary replays the original grant-commit event
+    old = events[0]
+    holder["cache"] = invalidate_perm_cache(
+        holder["cache"], old.start_page, old.n_pages, old.epoch,
+        min_shifted_entry=old.min_entry_idx)
+    assert int(holder["cache"].epoch) == fm.epoch   # fence did not roll back
+    r2, holder["cache"] = cached_check_access_jit(table2, local, ext, wr,
+                                                  holder["cache"])
+    assert not bool(np.asarray(r2.allowed).any())
+
+
+def test_missed_bisnp_event_fails_safe():
+    """A cache that MISSES a back-invalidate (gap in the epoch stream) must
+    never serve a stale grant: the open fence forces per-hit revalidation,
+    and the next event's gap detection drops everything."""
+    fm, (h0, _) = _system()
+    pid = h0.get_next_pid()
+    fm.propose(Proposal(0, pid, 1, 100, 50, PERM_RW))
+    cache = make_perm_cache(epoch=fm.epoch)       # NOT wired to the FM
+    local = make_hwpid_local([pid])
+    ext = pack_ext_addr(jnp.full((50,), pid), jnp.arange(100, 150))
+    wr = jnp.zeros((50,), bool)
+    table = fm.table.to_device()
+    r, cache = cached_check_access_jit(table, local, ext, wr, cache)
+    assert bool(np.asarray(r.allowed).all())
+    fm.revoke_hwpid(pid)                          # cache hears nothing
+    table2 = fm.table.to_device()
+    r2, cache = cached_check_access_jit(table2, local, ext, wr, cache)
+    assert not bool(np.asarray(r2.allowed).any()), \
+        "stale PermCache grant survived a missed BISnp"
+    # late event arrives with an epoch gap: full drop, fence jumps forward
+    cache = invalidate_perm_cache(cache, 0, 1, fm.epoch + 3)
+    assert not bool((np.asarray(cache.tag) >= 0).any())
+
+
+# ---------------------------------------------------------------------------
+# cross-host HWPID aliasing
+# ---------------------------------------------------------------------------
+
+def test_hwpid_pool_is_deployment_unique():
+    """SDM HWPIDs come from one FM-wide pool: two hosts can never be handed
+    the same HWPID, the prerequisite for A-bits meaning one process."""
+    fm, (h0, h1) = _system()
+    seen = {h0.get_next_pid() for _ in range(20)} | \
+           {h1.get_next_pid() for _ in range(20)}
+    assert len(seen) == 40
+
+
+def test_cross_host_alias_forged_abits_fault():
+    """A process on host1 forging host0's HWPID in its A-bits is stopped by
+    HWPID_local: the tag is not trusted on host1, FAULT_NOT_LOCAL."""
+    fm, (h0, h1) = _system()
+    victim = h0.get_next_pid()
+    attacker = h1.get_next_pid()
+    fm.propose(Proposal(0, victim, 1, 0, 64, PERM_RW))
+    table = fm.table.to_device()
+    # host1's checker trusts only host1's processes
+    local1 = make_hwpid_local([attacker])
+    forged = pack_ext_addr(jnp.full((4,), victim), jnp.asarray([0, 1, 2, 3]))
+    r = check_access(table, local1, forged, jnp.zeros((4,), bool))
+    assert not bool(np.asarray(r.allowed).any())
+    assert np.all(np.asarray(r.fault) == FAULT_NOT_LOCAL)
+    # a released HWPID returns to the shared pool exactly once
+    h1.release_pid(attacker)
+    h1.release_pid(attacker)
+    assert h0._free_hwpids.count(attacker) == 1
+
+
+# ---------------------------------------------------------------------------
+# post-revoke: the acceptance property
+# ---------------------------------------------------------------------------
+
+def test_post_revoke_next_access_faults_zero_filled():
+    """After FabricManager.revoke + BISnp broadcast, the VERY NEXT checked
+    access for the (hwpid, range) faults with zero-filled lanes — via the
+    wired PermCache, the fused egress kernel, and checked_gather — with no
+    flush-the-world: the other tenant's cached mappings survive and stay
+    on the fenced all-hit path."""
+    fm, (h0, _) = _system()
+    victim = h0.get_next_pid()
+    other = h0.get_next_pid()
+    fm.propose(Proposal(0, victim, 1, 100, 50, PERM_RW))
+    fm.propose(Proposal(0, other, 1, 1000, 50, PERM_RW))
+    holder = _wired_cache(fm)
+    svc = ShardViewCache()
+    table = fm.table.to_device()
+
+    pages_v = jnp.arange(100, 150)
+    pages_o = jnp.arange(1000, 1050)
+    ext_v = pack_ext_addr(jnp.full((50,), victim), pages_v)
+    ext_o = pack_ext_addr(jnp.full((50,), other), pages_o)
+    wr = jnp.zeros((50,), bool)
+    for ext, pid in ((ext_v, victim), (ext_o, other)):
+        r, holder["cache"] = cached_check_access_jit(
+            table, make_hwpid_local([pid]), ext, wr, holder["cache"])
+        assert bool(np.asarray(r.allowed).all())
+
+    fm.revoke_hwpid(victim)
+    table2 = fm.table.to_device()
+
+    # 1) cached checker: immediate fault, targeted invalidation only
+    r_v, holder["cache"] = cached_check_access_jit(
+        table2, make_hwpid_local([victim]), ext_v, wr, holder["cache"])
+    assert not bool(np.asarray(r_v.allowed).any())
+    assert np.all(np.asarray(r_v.fault) > 0)
+    r_o, holder["cache"] = cached_check_access_jit(
+        table2, make_hwpid_local([other]), ext_o, wr, holder["cache"])
+    assert bool(np.asarray(r_o.allowed).all())
+    assert int(np.asarray(r_o.probes).sum()) == 0, \
+        "victim's revoke flushed the other tenant's cached mappings"
+
+    # 2) fused egress kernel (stale ShardView re-resolves via epoch)
+    data = jnp.asarray(np.arange(50, dtype=np.uint32))
+    view = table_shard_view(table2, victim, cache=svc)
+    out, fault = checked_memcrypt_view_pallas(
+        data, ext_v, view, hwpid=victim, need=1, key0=1, key1=2,
+        interpret=True)
+    assert np.all(np.asarray(out) == 0), "revoked lanes must read zero"
+    assert np.all(np.asarray(fault) > 0)
+
+    # 3) framework gather zero-fills
+    pool = SharedTensorPool()
+    w = jnp.ones((8, 1024), jnp.float32)
+    region = pool.register("w", w)
+    fm.propose(Proposal(0, other, 1, region.start_page, region.n_pages,
+                        PERM_RW))
+    table3 = fm.table.to_device()
+    g = checked_gather(pool, "w", jnp.asarray([0, 1]), hwpid=victim,
+                       table=table3, hwpid_local=make_hwpid_local([victim]))
+    assert not bool(np.asarray(g.check.allowed).any())
+    assert np.all(np.asarray(g.data) == 0.0)
+
+
+def test_permbits_of_revoked_tenant_are_zero_everywhere():
+    """Defense in depth: after revocation the kernel operand derivation
+    (tenant_permbits) yields all-zero fields, so even a checker fed a stale
+    address stream cannot find a grant."""
+    fm, (h0, _) = _system()
+    pid = h0.get_next_pid()
+    fm.propose(Proposal(0, pid, 1, 0, 64, PERM_RW))
+    fm.propose(Proposal(0, pid, 1, 1000, 64, PERM_RW))
+    fm.revoke_hwpid(pid)
+    pb = np.asarray(tenant_permbits(fm.table.to_device(), pid))
+    assert np.all(pb == 0)

@@ -162,3 +162,22 @@ def test_cxl_baseline_deterministic(trace):
     a = simulate(trace, system="cxl", kernel="bfs")
     b = simulate(trace, system="cxl", kernel="bfs")
     assert a.cpi == b.cpi
+
+
+@pytest.mark.slow
+def test_long_trace_cache_sweep_slow():
+    """Long-trace (scale-14) BFS sweep: the 16 KiB permission cache keeps
+    its Fig. 13 shape on an order-of-magnitude longer trace than the tier-1
+    fixture drives."""
+    g = make_graph(scale=14, avg_degree=8, seed=5)
+    long_trace = trace_bfs(g, cap=600_000, seed=1)
+    sdm_pages = int(long_trace.pages.max() // 4096) + 1
+    cpis, misses = [], []
+    for cb in (0, 2048, 16384):
+        r, _ = run_pair(long_trace, n_entries=sdm_pages, cache_bytes=cb,
+                        n_hosts=1, kernel="bfs", sdm_pages=sdm_pages)
+        cpis.append(r.cpi)
+        misses.append(r.miss_ratio)
+    assert cpis[-1] <= cpis[0]
+    assert misses[-1] <= misses[0]
+    assert misses[-1] < 0.05

@@ -1,0 +1,181 @@
+"""End-to-end tenant lifecycle on the continuous-batching serve engine:
+admission, eviction, and mid-flight revocation under load.
+
+The acceptance property lives here at the serving level (its unit-level
+twin is tests/test_adversarial.py): after FabricManager.revoke + BISnp,
+the revoked tenant's very next KV-page touch faults and aborts ONLY its
+requests — other tenants' batches commit untouched AND stay on the
+permission cache's fenced all-hit fast path (targeted invalidation, no
+flush-the-world).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro.launch.serve import ServeEngine
+from repro.models import registry
+
+
+@pytest.fixture(scope="module")
+def engine_factory():
+    cfg = smoke_config(ARCHS["qwen1.5-0.5b"])
+    params = registry.init_params(cfg, jax.random.key(0))
+
+    def make(batch=2, cap=24, **kw):
+        return ServeEngine(cfg, params, batch=batch, cap=cap, **kw)
+
+    return make
+
+
+def _prompts(engine, rng, name, n, plen=10):
+    for _ in range(n):
+        engine.submit(name, rng.integers(3, engine.cfg.vocab - 1, plen))
+
+
+def test_join_leave_revoke_under_load(engine_factory):
+    rng = np.random.default_rng(0)
+    engine = engine_factory()
+    a = engine.add_tenant("a", host_id=0)
+    b = engine.add_tenant("b", host_id=1)
+    _prompts(engine, rng, "a", 3)
+    _prompts(engine, rng, "b", 2)
+
+    # run a few interleaved steps, then admit a tenant mid-flight
+    for _ in range(2):
+        engine.step(gen=4)
+    c = engine.add_tenant("c", host_id=0)
+    _prompts(engine, rng, "c", 2)
+    assert {a.hwpid, b.hwpid, c.hwpid} == {a.hwpid, b.hwpid, c.hwpid}
+
+    # revoke b mid-flight: its NEXT step must abort; a and c must not
+    assert engine.tenants["b"].group is not None, "b should be in flight"
+    engine.revoke("b")
+    res = engine.step(gen=4)
+    assert res["b"]["aborted"] and res["b"]["fault"] > 0
+    assert not res["a"]["aborted"] and not res["c"]["aborted"]
+    assert len(engine.tenants["b"].aborted) > 0
+
+    # targeted invalidation: a's next check is all-hit (no probes burned)
+    hits0 = int(engine.permcache.hits)
+    ta = engine.tenants["a"]
+    lanes = len(ta.group) if ta.group is not None \
+        else min(engine.batch, len(ta.queue))
+    res = engine.step(gen=4, only="a")
+    assert not res["a"]["aborted"]
+    assert int(engine.permcache.hits) - hits0 == lanes, \
+        "b's revoke dropped a's cached mappings (not targeted)"
+
+    # drain: a and c retire everything, b retires nothing more
+    engine.run(gen=4, max_steps=200)
+    assert len(engine.tenants["a"].done) == 3
+    assert len(engine.tenants["c"].done) == 2
+    assert engine.tenants["b"].queue == [] or engine.tenants["b"].aborted
+    # every done request generated exactly gen tokens
+    for _, generated in engine.tenants["a"].done:
+        assert len(generated) == 4
+
+    # epoch fence is closed at quiescence
+    assert int(engine.permcache.epoch) == engine.fm.epoch
+    assert engine.bisnp_events > 0
+
+
+def test_evict_releases_and_readmit_reuses_pages(engine_factory):
+    rng = np.random.default_rng(1)
+    engine = engine_factory()
+    a = engine.add_tenant("a", host_id=0)
+    b = engine.add_tenant("b", host_id=0)
+    _prompts(engine, rng, "b", 1)
+    engine.step(gen=3)                      # b goes in flight
+    old_span = (b.kv_start_page, b.kv_n_pages)
+    old_pid = b.hwpid
+    epoch0 = engine.fm.epoch
+
+    evicted = engine.evict_tenant("b")
+    assert evicted.revoked and "b" not in engine.tenants
+    assert len(evicted.aborted) == 1        # in-flight request aborted
+    # one transaction -> one epoch bump for release_range + revoke_hwpid
+    assert engine.fm.epoch == epoch0 + 1
+
+    # readmission reuses the freed page span and (eventually) the HWPID
+    c = engine.add_tenant("c", host_id=0)
+    assert (c.kv_start_page, c.kv_n_pages) == old_span
+    assert old_pid in engine.fm.hosts[0]._free_hwpids
+
+    _prompts(engine, rng, "c", 1)
+    r = engine.run_tenant("c", gen=3)
+    assert not r["aborted"] and r["served"] == 1
+    # a was never disturbed
+    _prompts(engine, rng, "a", 1)
+    ra = engine.run_tenant("a", gen=2)
+    assert not ra["aborted"]
+
+
+def test_revoked_tenant_faults_at_prefill_boundary(engine_factory):
+    """Revocation between groups: the tenant's NEXT group aborts at its
+    first KV touch, before any token commits."""
+    rng = np.random.default_rng(2)
+    engine = engine_factory()
+    engine.add_tenant("a", host_id=0)
+    _prompts(engine, rng, "a", 1)
+    assert not engine.run_tenant("a", 2)["aborted"]
+    engine.revoke("a")
+    _prompts(engine, rng, "a", 1)
+    r = engine.run_tenant("a", gen=2)
+    assert r["aborted"] and r["fault"] > 0
+    assert engine.tenants["a"].done and len(engine.tenants["a"].done) == 1
+
+
+def test_fused_egress_path_tracks_epochs(engine_factory):
+    """With device-level fused egress on, each step's KV lines also pass
+    the Pallas check⊕decrypt kernel; its epoch-stamped shard views rebuild
+    exactly once per FM commit and agree with the cached checker on every
+    verdict, including across a mid-flight revocation."""
+    rng = np.random.default_rng(4)
+    engine = engine_factory(fused_egress=True)
+    engine.add_tenant("a", host_id=0)
+    engine.add_tenant("b", host_id=1)
+    _prompts(engine, rng, "a", 1)
+    _prompts(engine, rng, "b", 1)
+    engine.run(gen=3, max_steps=50)
+    assert len(engine.tenants["a"].done) == 1
+    rebuilds0 = engine.shard_views.rebuilds
+    assert engine.shard_views.reuses > 0, "views were not reused at epoch"
+    # revocation bumps the epoch: views re-resolve, kernel faults b
+    engine.revoke("b")
+    _prompts(engine, rng, "b", 1)
+    r = engine.run_tenant("b", gen=3)
+    assert r["aborted"] and r["fault"] > 0
+    assert engine.shard_views.rebuilds > rebuilds0
+    _prompts(engine, rng, "a", 1)
+    assert not engine.run_tenant("a", gen=3)["aborted"]
+
+
+@pytest.mark.slow
+def test_sustained_churn_rounds(engine_factory):
+    """Six churn rounds: each round admits a tenant, serves, revokes or
+    evicts one — addresses recycle, the fence stays closed, nobody's
+    requests cross-abort."""
+    rng = np.random.default_rng(3)
+    engine = engine_factory()
+    engine.add_tenant("keeper", host_id=0)
+    peak_pages = None
+    for round_ in range(6):
+        name = f"t{round_}"
+        engine.add_tenant(name, host_id=1)
+        _prompts(engine, rng, name, 2, plen=8)
+        _prompts(engine, rng, "keeper", 1, plen=8)
+        engine.run(gen=3, max_steps=100)
+        assert len(engine.tenants[name].done) == 2
+        if round_ % 2:
+            engine.revoke(name)
+            _prompts(engine, rng, name, 1, plen=8)
+            assert engine.run_tenant(name, gen=3)["aborted"]
+        engine.evict_tenant(name)
+        if peak_pages is None:
+            peak_pages = engine.pool.total_pages
+        assert int(engine.permcache.epoch) == engine.fm.epoch
+    # page space does not leak across rounds (free-list reuse)
+    assert engine.pool.total_pages == peak_pages
+    assert len(engine.tenants["keeper"].done) == 6
+    assert not engine.tenants["keeper"].aborted
