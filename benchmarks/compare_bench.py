@@ -1,0 +1,103 @@
+"""Benchmark regression gate: fresh BENCH_kernels.json vs committed baseline.
+
+    python benchmarks/compare_bench.py --baseline BENCH_kernels.json \
+        --fresh BENCH_kernels_fresh.json [--max-regression 0.25]
+
+Guards the two headline speedups of the egress fast path against silent
+regression in CI:
+
+  * **hier-vs-flat** — the two-level hierarchical permcheck kernel's
+    speedup over the brute-force full scan (median across the permcheck
+    bench's size/trace grid: per-row ratios share one process and one rng
+    seed, so the median ratio is far steadier than any absolute timing on a
+    noisy shared runner);
+  * **perm-cache hot path** — the vectorized 16 KiB permission cache's
+    all-hit speedup over the uncached binary search (`perm_cache.fits`).
+
+A metric fails when ``fresh < (1 - max_regression) * baseline``.  Missing
+metrics fail loudly (a bench silently dropping out of the JSON is itself a
+regression).  Exit status: 0 clean, 1 regression/missing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+
+def _hier_vs_flat(rec: dict) -> float:
+    """Median hier-over-flat speedup across the permcheck size grid, HOT
+    traces only: the locality fast path is what the two-level kernel
+    targets, and the uniform-trace ratios hover near 1.0 where runner
+    noise would drag the median toward a spurious gate failure."""
+    rows = rec["permcheck"]["rows"]
+    ratios = [row["hot"]["speedup_x"]
+              for row in rows.values()
+              if isinstance(row, dict) and "hot" in row]
+    if not ratios:
+        raise KeyError("permcheck rows carry no hot speedup_x entries")
+    return float(np.median(ratios))
+
+
+def _perm_cache_hot(rec: dict) -> float:
+    return float(rec["perm_cache"]["fits"]["speedup_x"])
+
+
+METRICS = {
+    "hier_vs_flat_speedup_x": _hier_vs_flat,
+    "perm_cache_hot_speedup_x": _perm_cache_hot,
+}
+
+
+def compare(baseline: dict, fresh: dict, *, max_regression: float) -> list:
+    """Returns [(metric, base, fresh, ok)] — ok=False on regression or a
+    metric missing from the fresh record."""
+    out = []
+    for name, extract in METRICS.items():
+        base = extract(baseline)
+        try:
+            new = extract(fresh)
+        except (KeyError, TypeError):
+            out.append((name, base, None, False))
+            continue
+        out.append((name, base, new, new >= (1 - max_regression) * base))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="BENCH_kernels.json",
+                    help="committed baseline JSON")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly produced JSON to validate")
+    ap.add_argument("--max-regression", type=float, default=0.25,
+                    help="tolerated fractional drop (default 25%%)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    rows = compare(baseline, fresh, max_regression=args.max_regression)
+    failed = False
+    print(f"{'metric':34s} {'baseline':>9s} {'fresh':>9s}  verdict")
+    for name, base, new, ok in rows:
+        verdict = "ok" if ok else "REGRESSED"
+        if new is None:
+            new_s, verdict = "missing", "MISSING"
+        else:
+            new_s = f"{new:.2f}"
+        print(f"{name:34s} {base:9.2f} {new_s:>9s}  {verdict}")
+        failed |= not ok
+    if failed:
+        print(f"\nFAIL: speedup dropped more than "
+              f"{args.max_regression:.0%} below the committed baseline")
+        sys.exit(1)
+    print("\nbenchmark gate clean")
+
+
+if __name__ == "__main__":
+    main()

@@ -39,6 +39,11 @@ def _headline(name: str, rec: dict) -> str:
                     f"{rec['deact_scaled_pct']}%")
         if name == "fig11_breakdown":
             return f"enforcement share={rec['avg_enforcement_share']:.4f}"
+        if name == "scale_deployment":
+            return (f"{rec['hosts']}h/{rec['procs']}p storage "
+                    f"{rec['worst_case_storage_pct']}% cache "
+                    f"{rec['cache_penalty_pct']}% fanout "
+                    f"{rec['bisnp_us_per_host']}us/host")
     except Exception:  # noqa: BLE001
         pass
     return rec.get("description", "")[:60]

@@ -21,6 +21,7 @@ from repro.core import (
     PERM_R,
     PERM_RW,
     Proposal,
+    ShardedFabric,
     check_access,
     make_hwpid_local,
     pack_ext_addr,
@@ -83,4 +84,49 @@ for kern in ["pr", "bfs", "bc", "tc"]:
                          kernel=kern, sdm_pages=lay.total_pages)
     print(f"  {kern:4s}  {res.cpi_norm:.4f}  "
           f"(plpki={res.plpki:.2f}, cache miss={res.miss_ratio:.4f})")
+
+# --- fabric-scale batched egress (sharded fabric + async BISnp bus) ----------
+# The same scenario on the deployment-simulation subsystem: the SDM page
+# space is sharded across 8 hosts, each worker replays its GAPBS reference
+# stream against its resident shard, and every step's H host-batches run
+# through ONE batched check⊕decrypt kernel launch.  A mid-run revocation
+# (one FM commit, BISnp'd over the async bus) kills exactly one host's
+# lanes while the rest stay fault-free.
+print("\nfabric-scale replay: 8 hosts, sharded permission table, one "
+      "batched egress launch per step")
+n_hosts, span, batch, steps = 8, 256, 1024, 4
+fab = ShardedFabric(sdm_pages=n_hosts * 1024, table_capacity=4096,
+                    n_shards=n_hosts)
+for h in range(n_hosts):
+    fab.enroll(h)
+tenants = {h: fab.admit(h, span) for h in range(n_hosts)}
+fab.quiesce()   # all hosts observe the grants -> fenced all-hit from step 1
+
+rng = np.random.default_rng(0)
+fabric_kernels = ["pr", "bfs", "bc", "tc"] * 2
+ext_by_host = {}
+for h, kern in enumerate(fabric_kernels):
+    pid, start = tenants[h]
+    tr = gapbs.TRACES[kern](g, cap=40_000, seed=h)
+    ext_by_host[h], _ = gapbs.egress_batches(
+        tr, hwpid=pid, batch=batch, n_steps=steps,
+        page_offset=start, page_span=span)
+hwpid_by_host = {h: tenants[h][0] for h in range(n_hosts)}
+victim = 3
+for s in range(steps):
+    if s == steps // 2:   # revoke host 3's tenant mid-replay
+        fab.evict(victim, tenants[victim][0])
+        fab.quiesce()
+    ext = np.stack([ext_by_host[h][s] for h in range(n_hosts)])
+    data = rng.integers(0, 1 << 32, ext.shape, dtype=np.uint32)
+    out, fault = fab.step_egress(data, ext, hwpid_by_host, need=1)
+    per_host = (np.asarray(fault) != 0).sum(axis=1)
+    print(f"  step {s}: denied lanes/host = {per_host.tolist()}")
+    assert all(per_host[h] == 0 for h in range(n_hosts)
+               if h != victim or s < steps // 2)
+    if s >= steps // 2:
+        assert per_host[victim] == batch, "revoked host must be fully denied"
+st = fab.stats()
+print(f"fabric stats: epoch={st['epoch']}, bus={st['bus']}, "
+      f"shard entries/host={list(st['shard_entries'].values())}")
 print("multihost sharing example OK")

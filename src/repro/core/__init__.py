@@ -8,6 +8,7 @@ Paper components -> modules:
   Fabric manager      -> repro.core.fm.FabricManager
   SDM integration     -> repro.core.pool (SharedTensorPool / checked_gather)
 """
+from .bus import BISnpBus
 from .cache import LruCache
 from .checker import (
     FAULT_NO_ABITS,
@@ -26,6 +27,7 @@ from .checker import (
     make_perm_cache,
 )
 from .crypto import arx_mac32, arx_mac64, derive_key, hmac_label
+from .fabric import FabricView, HostRuntime, ShardedFabric, stack_views
 from .fm import BISnpEvent, FabricManager, Proposal
 from .pool import GatherResult, Region, SharedTensorPool, checked_gather
 from .space import RING_KERNEL, RING_USER, SpaceEngine

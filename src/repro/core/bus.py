@@ -1,0 +1,136 @@
+"""Asynchronous BISnp event bus (fabric-scale back-invalidate delivery).
+
+The synchronous model (PR 2) called every host's invalidation handler inline
+inside the FM's commit path — fine for a handful of hosts, quadratic pain at
+the paper's 255-host deployment and wrong as a model: real CXL BISnp messages
+are posted onto the fabric and arrive at each host's snoop queue
+asynchronously, in order, some time later.
+
+`BISnpBus` models exactly that:
+
+  * **per-host ordered queues** — `publish()` appends one event to every
+    attached host's FIFO; a host consumes its queue in publish order, so the
+    epoch stream each host observes is gap-free by construction and the
+    `PermCache` fence (see `repro.core.checker.invalidate_perm_cache`) stays
+    on its targeted-drop path;
+  * **bounded delivery lag** — no host may fall more than `max_lag` events
+    behind the FM: `publish()` force-delivers the oldest queued events of any
+    host whose backlog would exceed the bound (the hardware analogue: the
+    snoop queue back-pressures the fabric).  `lag(host)` ≤ `max_lag` is a
+    bus invariant, asserted by tests/test_fabric.py;
+  * **drain / quiesce semantics** — `deliver(host, k)` consumes up to `k`
+    events at one host (the simulation's "some time later"); `drain(host)`
+    empties one queue; `quiesce()` empties every queue and returns only when
+    the whole fabric has observed every committed epoch — the barrier the FM
+    needs before e.g. handing a revoked page range to a new tenant;
+  * **failure isolation** — a raising handler never blocks delivery to other
+    hosts or wedges its own queue: the event counts as consumed, the error
+    is recorded in `bus.errors`, and delivery continues.  The consumer-side
+    epoch fence makes this safe: a host that missed an event's *effect*
+    observes the epoch gap on the next event and resyncs (drop-everything
+    path) instead of trusting stale mappings.
+
+The bus is deliberately deterministic (no threads, no clocks): "async" means
+*delivery is decoupled from publication and interleavable per host*, which is
+the property the convergence differential test pins — any schedule of
+`deliver()` calls followed by `quiesce()` leaves every host in the same state
+as the old synchronous broadcast.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (fm imports bus)
+    from .fm import BISnpEvent
+
+
+class BISnpBus:
+    """Deterministic per-host ordered delivery of FM back-invalidates."""
+
+    def __init__(self, *, max_lag: int | None = 64):
+        if max_lag is not None and max_lag < 1:
+            raise ValueError("max_lag must be >= 1 (or None for unbounded)")
+        self.max_lag = max_lag
+        self._queues: dict[int, deque] = {}
+        self._handlers: dict[int, Callable[["BISnpEvent"], None]] = {}
+        self.published = 0
+        self.delivered = 0
+        self.forced_deliveries = 0   # events delivered by the lag bound
+        self.errors: list[tuple[int, object, BaseException]] = []
+
+    # -- membership ----------------------------------------------------------
+    def attach(self, host_id: int,
+               handler: Callable[["BISnpEvent"], None]) -> None:
+        """Subscribe a host's snoop-queue consumer.  Events published before
+        attachment are never seen (a late-enrolled host starts at the current
+        epoch — its caches start cold, which is always safe)."""
+        if host_id in self._handlers:
+            raise ValueError(f"host {host_id} already attached")
+        self._handlers[host_id] = handler
+        self._queues[host_id] = deque()
+
+    def detach(self, host_id: int) -> None:
+        """Unsubscribe (host decommission).  Pending events are dropped —
+        the host's caches die with it."""
+        self._handlers.pop(host_id, None)
+        self._queues.pop(host_id, None)
+
+    @property
+    def hosts(self) -> tuple[int, ...]:
+        return tuple(self._handlers)
+
+    # -- publication ---------------------------------------------------------
+    def publish(self, ev: "BISnpEvent") -> None:
+        """Enqueue `ev` on every attached host's queue, enforcing the lag
+        bound by force-delivering each over-full host's OLDEST events first
+        (order preserved — the new event is always consumed last)."""
+        self.published += 1
+        for host_id, q in self._queues.items():
+            q.append(ev)
+            if self.max_lag is not None:
+                while len(q) > self.max_lag:
+                    self.forced_deliveries += 1
+                    self._deliver_one(host_id, q)
+
+    # -- consumption ---------------------------------------------------------
+    def _deliver_one(self, host_id: int, q: deque) -> None:
+        ev = q.popleft()
+        self.delivered += 1
+        try:
+            self._handlers[host_id](ev)
+        except Exception as exc:  # noqa: BLE001 - isolation is the point
+            self.errors.append((host_id, ev, exc))
+
+    def deliver(self, host_id: int, max_events: int | None = None) -> int:
+        """Consume up to `max_events` (default: all) queued events at one
+        host, in publish order.  Returns the number delivered."""
+        q = self._queues[host_id]
+        n = len(q) if max_events is None else min(max_events, len(q))
+        for _ in range(n):
+            self._deliver_one(host_id, q)
+        return n
+
+    def drain(self, host_id: int | None = None) -> int:
+        """Deliver everything queued at one host (or, with None, at all)."""
+        if host_id is not None:
+            return self.deliver(host_id)
+        return sum(self.deliver(h) for h in tuple(self._queues))
+
+    def quiesce(self) -> int:
+        """Fabric barrier: deliver until every queue is empty (handlers may
+        not publish, so one pass suffices; asserted).  After `quiesce()`
+        every attached host has observed every committed epoch."""
+        n = self.drain()
+        if any(self._queues.values()):
+            raise RuntimeError("bus handlers must not publish during "
+                               "delivery — quiesce barrier violated")
+        return n
+
+    # -- introspection -------------------------------------------------------
+    def lag(self, host_id: int) -> int:
+        """Events published but not yet observed by `host_id`."""
+        return len(self._queues[host_id])
+
+    def max_observed_lag(self) -> int:
+        return max((len(q) for q in self._queues.values()), default=0)

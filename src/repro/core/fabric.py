@@ -1,0 +1,464 @@
+"""Sharded fabric deployment simulation (paper abstract: 127 concurrent
+processes across up to 255 hosts sharing one SDM).
+
+`FabricManager` (repro.core.fm) is the trusted control plane; this module is
+the *data plane at fabric scale*: each enrolled host owns a `HostRuntime`
+bundling its SpaceEngine, an epoch-fenced `PermCache` fed by the async
+`BISnpBus`, and a page-range **resident shard** of the permission table —
+the subset of entries its egress checker and Pallas kernels actually load.
+
+Sharding model
+--------------
+The SDM page space is partitioned into `n_shards` contiguous ranges; host
+`h` is resident for shard `h` plus any explicitly added shared ranges (e.g.
+the graph structure every worker reads).  A host's checker never touches
+entries outside its resident ranges: the shard is re-extracted from the
+committed table at most once per epoch (`shard_rebuilds` counts how often
+churn actually forced it), and per-tenant `ShardView`s for the Pallas
+kernels are memoized the same way.  Entries straddling a shard boundary are
+kept whole — a superset shard is only ever extra work, never a wrong
+verdict, because the checker's range test is exact.
+
+Observation model
+-----------------
+The committed `HostTable` is ground truth (what the SDM itself stores); the
+`PermCache` models what the host has *observed through BISnp delivery*.
+While a host lags the bus its cache epoch trails the table epoch, so
+`cached_check_access` falls back to revalidating hits against the live
+shard — stale mappings degrade to misses, never stale grants — and the
+moment the host drains its queue the fence closes and the all-hit fast path
+returns.  One shard-index subtlety: cached entry indices are SHARD-LOCAL,
+but `BISnpEvent.min_entry_idx` announces GLOBAL index shifts, and the two
+cannot be reconciled host-side.  `HostRuntime.on_bisnp` therefore applies
+index-shifting commits (inserts/vacuum, `min_entry_idx is not None`) as a
+full index flush, while index-stable commits — in-place revokes, the
+tenant-churn hot path — keep the targeted-drop fast path.  Globally
+index-stable is still not enough: a count-preserving geometry change can
+grow an entry INTO the resident range and shift later entries' shard-local
+ranks, so shard extraction additionally diffs the kept-index set against
+the previous epoch's and flushes the cache's index mappings whenever
+membership moved (see `_resident_entries`).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .checker import (PERM_CACHE_BYTES, cached_check_access_jit,
+                      invalidate_perm_cache, make_hwpid_local,
+                      make_perm_cache)
+from .fm import BISnpEvent, FabricManager, Proposal
+from .table import EMPTY_START, PERM_RW, PermissionTable, _NO_END
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.kernels.permcheck import ShardView, ShardViewCache
+
+# repro.kernels.permcheck imports repro.core.table, so importing it at
+# module scope here (re-exported via repro.core.__init__) would be circular
+# whenever the kernels package loads first — resolve it lazily instead.
+
+
+def _permcheck_mod():
+    from repro.kernels import permcheck
+    return permcheck
+
+
+class HostRuntime:
+    """Per-host data plane: SpaceEngine + fenced PermCache + resident shard."""
+
+    def __init__(self, fabric: "ShardedFabric", host_id: int,
+                 page_lo: int, page_hi: int, *,
+                 perm_cache_bytes: int = PERM_CACHE_BYTES):
+        self.fabric = fabric
+        self.host_id = host_id
+        self.engine = fabric.fm.hosts[host_id]
+        self.page_lo = page_lo
+        self.page_hi = page_hi
+        self._extra_ranges: list[tuple[int, int]] = []
+        self.hwpids: set[int] = set()
+        self.permcache = make_perm_cache(perm_cache_bytes,
+                                         epoch=fabric.fm.epoch)
+        self.views = _permcheck_mod().ShardViewCache()
+        self.bisnp_seen = 0
+        self.shard_rebuilds = 0
+        self._shard: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None
+        self._shard_idx: np.ndarray | None = None  # kept global indices
+        self._shard_epoch = -1
+        self._shard_table: PermissionTable | None = None
+        self._hwpid_local: jax.Array | None = None
+        fabric.fm.bus.attach(host_id, self.on_bisnp)
+
+    # -- bus consumer (the old sync-broadcast logic, now queue-driven) -------
+    def on_bisnp(self, ev: BISnpEvent) -> None:
+        """Apply one delivered back-invalidate: targeted PermCache drop with
+        the epoch fence's replay/gap semantics.  Index-shifting commits
+        flush index mappings entirely (global `min_entry_idx` cannot be
+        translated into this host's shard-local index space — see module
+        docstring); index-stable commits stay targeted."""
+        self.bisnp_seen += 1
+        min_shifted = None if ev.min_entry_idx is None else 0
+        self.permcache = invalidate_perm_cache(
+            self.permcache, ev.start_page, ev.n_pages, ev.epoch,
+            min_shifted_entry=min_shifted)
+
+    # -- resident shard ------------------------------------------------------
+    def add_resident_range(self, start_page: int, n_pages: int) -> None:
+        """Mark an extra page range (e.g. a shared read-only region) as
+        resident on this host's checker.  Derived state is epoch-keyed and
+        the table epoch does not move here, so every memo layer (shard
+        arrays, per-tenant views, the fabric-level stacked view) must be
+        dropped explicitly."""
+        self._extra_ranges.append((start_page, start_page + n_pages))
+        self._shard_epoch = -1  # force re-extraction
+        self.views = _permcheck_mod().ShardViewCache()
+        self.fabric._fabric_view_key = None
+
+    def resident_ranges(self) -> list[tuple[int, int]]:
+        return [(self.page_lo, self.page_hi)] + self._extra_ranges
+
+    def lag(self) -> int:
+        return self.fabric.fm.bus.lag(self.host_id)
+
+    def _resident_entries(self):
+        """(starts, ends, perm_words) of committed entries overlapping any
+        resident range, re-extracted at most once per table epoch."""
+        ht = self.fabric.fm.table
+        if self._shard is not None and self._shard_epoch == ht.epoch:
+            return self._shard
+        n = ht.n
+        starts = ht.starts[:n]
+        ends = starts + ht.sizes[:n]
+        keep = np.zeros(n, bool)
+        for lo, hi in self.resident_ranges():
+            i0 = int(np.searchsorted(ends, lo, side="right"))
+            i1 = int(np.searchsorted(starts, hi, side="left"))
+            keep[i0:i1] = True
+        idx = np.flatnonzero(keep)
+        if self._shard_idx is not None and \
+                not np.array_equal(idx, self._shard_idx):
+            # Shard MEMBERSHIP changed — possible even when the commit was
+            # globally index-stable (a count-preserving geometry change,
+            # e.g. revoke_range split+coalesce, can grow an entry into the
+            # resident range).  Every later entry's shard-local rank then
+            # shifts, and the PermCache's cached (page -> rank) mappings
+            # for untouched pages would dangle: inside the fence a stale
+            # rank is trusted without revalidation and a valid grant would
+            # be denied.  Flush index mappings locally (targeted-drop form;
+            # the epoch fence itself is untouched — only bus events move
+            # it).  Extraction always precedes the probe in `check`, so the
+            # flush lands before any fenced hit at the new epoch.
+            self.permcache = invalidate_perm_cache(
+                self.permcache, 0, 0, int(self.permcache.epoch),
+                min_shifted_entry=0)
+        self._shard_idx = idx
+        self._shard = (starts[idx].copy(), ends[idx].copy(),
+                       ht.perms[:n][idx].copy())
+        self._shard_epoch = ht.epoch
+        self._shard_table = None
+        self.shard_rebuilds += 1
+        return self._shard
+
+    def shard_entries(self) -> int:
+        return self._resident_entries()[0].shape[0]
+
+    def shard_table(self) -> PermissionTable:
+        """Device `PermissionTable` holding ONLY this host's resident shard
+        (what the framework checker binary-searches), epoch-stamped."""
+        self._resident_entries()
+        if self._shard_table is not None:
+            return self._shard_table
+        s, e, pw = self._shard
+        n = s.shape[0]
+        cap = max(8, 1 << (max(n, 1) - 1).bit_length())
+        self._shard_table = PermissionTable(
+            starts=jnp.full((cap,), EMPTY_START, jnp.int32).at[:n].set(
+                jnp.asarray(s, jnp.int32)),
+            sizes=jnp.zeros((cap,), jnp.int32).at[:n].set(
+                jnp.asarray(e - s, jnp.int32)),
+            perms=jnp.zeros((cap, pw.shape[1]), jnp.uint32).at[:n].set(
+                jnp.asarray(pw)),
+            meta=jnp.zeros((cap,), jnp.uint32),
+            n=jnp.asarray(n, jnp.int32),
+            epoch=self._shard_epoch,
+        )
+        return self._shard_table
+
+    def shard_view(self, hwpid: int) -> "ShardView":
+        """Padded + tile-summarized Pallas operands for one tenant over the
+        resident shard, memoized per (tenant, epoch)."""
+        s, e, pw = self._resident_entries()
+        epoch = self._shard_epoch
+
+        def build() -> "ShardView":
+            word = pw[:, hwpid // 16]
+            permbits = (word >> np.uint32((hwpid % 16) * 2)) & np.uint32(3)
+            return _permcheck_mod().make_shard_view(s, e, permbits,
+                                                    epoch=epoch)
+
+        return self.views.get(hwpid, epoch, build)
+
+    # -- the host-side egress check -----------------------------------------
+    def hwpid_local(self) -> jax.Array:
+        if self._hwpid_local is None:
+            self._hwpid_local = make_hwpid_local(sorted(self.hwpids))
+        return self._hwpid_local
+
+    def check(self, ext_addrs, is_write):
+        """Framework permission check against the resident shard through
+        this host's fenced PermCache.  Returns the CheckResult; the cache is
+        threaded internally."""
+        table = self.shard_table()
+        res, self.permcache = cached_check_access_jit(
+            table, self.hwpid_local(), ext_addrs, is_write, self.permcache)
+        return res
+
+    def _grant_installed(self, hwpid: int) -> None:
+        self.hwpids.add(hwpid)
+        self._hwpid_local = None
+
+    def _grant_released(self, hwpid: int) -> None:
+        self.hwpids.discard(hwpid)
+        self._hwpid_local = None
+        self.views.drop(hwpid)
+
+
+class FabricView(NamedTuple):
+    """Stacked per-host shard operands for the batched multi-host egress
+    kernel (`repro.kernels.fabric_egress.fabric_egress_pallas`): row `i`
+    holds host `host_ids[i]`'s resident shard padded to the fleet-wide
+    entry count, with `permbits` pre-extracted for that host's tenant
+    `hwpids[i]`."""
+    starts: jax.Array     # i32[H, N]
+    ends: jax.Array       # i32[H, N]
+    permbits: jax.Array   # u32[H, N]
+    tile_min: jax.Array   # i32[H, T]
+    tile_max: jax.Array   # i32[H, T]
+    hwpids: jax.Array     # i32[H]
+    host_ids: tuple[int, ...]
+    epoch: int = 0
+
+    @property
+    def n_hosts(self) -> int:
+        return self.starts.shape[0]
+
+
+def stack_views(views: "list[ShardView]", hwpids, host_ids,
+                *, epoch: int) -> FabricView:
+    """Pad per-host ShardViews to a common entry count and stack them into
+    one FabricView.  Padding uses the same never-matching sentinels as
+    `_pad_shard` (INT32_MAX entry bounds, empty-tile summaries)."""
+    n_pad = max(v.starts.shape[0] for v in views)
+    t_pad = max(v.n_tiles for v in views)
+    smax = jnp.int32(np.iinfo(np.int32).max)
+
+    def pad1(a, n, fill, dtype):
+        out = jnp.full((n,), fill, dtype)
+        return out.at[:a.shape[0]].set(jnp.asarray(a, dtype))
+
+    return FabricView(
+        starts=jnp.stack([pad1(v.starts, n_pad, smax, jnp.int32)
+                          for v in views]),
+        ends=jnp.stack([pad1(v.ends, n_pad, smax, jnp.int32)
+                        for v in views]),
+        permbits=jnp.stack([pad1(v.permbits, n_pad, 0, jnp.uint32)
+                            for v in views]),
+        tile_min=jnp.stack([pad1(v.tile_min, t_pad, EMPTY_START, jnp.int32)
+                            for v in views]),
+        tile_max=jnp.stack([pad1(v.tile_max, t_pad, _NO_END, jnp.int32)
+                            for v in views]),
+        hwpids=jnp.asarray(list(hwpids), jnp.int32),
+        host_ids=tuple(host_ids),
+        epoch=epoch,
+    )
+
+
+class ShardedFabric:
+    """A full deployment: one FM + N `HostRuntime`s over a page-sharded SDM.
+
+    The fabric partitions the SDM page space into `n_shards` equal ranges
+    (shard `h` -> host `h`), allocates tenant page spans inside their host's
+    shard, and drives cross-host batched egress through the stacked Pallas
+    kernel.  BISnp delivery runs through the FM's async bus: call
+    `deliver()`/`quiesce()` to advance host observation, or let the bounded
+    lag force it.
+    """
+
+    def __init__(self, sdm_pages: int, table_capacity: int, n_shards: int,
+                 *, max_bisnp_lag: int | None = 64,
+                 perm_cache_bytes: int = PERM_CACHE_BYTES):
+        if not (1 <= n_shards <= 255):
+            raise ValueError("n_shards must be in [1, 255] (paper abstract)")
+        self.fm = FabricManager(sdm_pages, table_capacity,
+                                max_bisnp_lag=max_bisnp_lag)
+        self.n_shards = n_shards
+        self.perm_cache_bytes = perm_cache_bytes
+        self.runtimes: dict[int, HostRuntime] = {}
+        self._alloc_cursor: dict[int, int] = {}
+        self._free_spans: dict[int, list[tuple[int, int]]] = {}
+        self._grants: dict[int, tuple[int, int, int]] = {}
+        self._fabric_view: FabricView | None = None
+        self._fabric_view_key = None
+
+    # -- topology ------------------------------------------------------------
+    def shard_range(self, host_id: int) -> tuple[int, int]:
+        """Page range [lo, hi) of shard `host_id` (contiguous partition)."""
+        if not (0 <= host_id < self.n_shards):
+            raise ValueError(f"host {host_id} outside [0, {self.n_shards})")
+        per = -(-self.fm.sdm_pages // self.n_shards)
+        lo = host_id * per
+        return lo, min(lo + per, self.fm.sdm_pages)
+
+    def enroll(self, host_id: int, *, n_cores: int = 8) -> HostRuntime:
+        self.fm.enroll_host(host_id, n_cores)
+        lo, hi = self.shard_range(host_id)
+        rt = HostRuntime(self, host_id, lo, hi,
+                         perm_cache_bytes=self.perm_cache_bytes)
+        self.runtimes[host_id] = rt
+        self._alloc_cursor[host_id] = lo
+        self._free_spans[host_id] = []
+        return rt
+
+    # -- tenancy -------------------------------------------------------------
+    def assign_hwpid(self, host_id: int) -> int:
+        """Hand out a deployment-unique HWPID on `host_id` and mark it
+        trusted there (callers then attach grants via `fm.propose` /
+        `grant_shared`)."""
+        rt = self.runtimes[host_id]
+        hwpid = rt.engine.get_next_pid()
+        rt._grant_installed(hwpid)
+        return hwpid
+
+    def admit(self, host_id: int, n_pages: int, *, perm: int = PERM_RW,
+              base_p: int | None = None) -> tuple[int, int]:
+        """Admit one process on `host_id`: bump-allocate a page span inside
+        the host's shard, assign a deployment-unique HWPID, and commit the
+        grant (one epoch bump, one BISnp publish).  Returns
+        (hwpid, start_page)."""
+        rt = self.runtimes[host_id]
+        start = self._alloc_span(host_id, n_pages)
+        hwpid = self.assign_hwpid(host_id)
+        label = self.fm.propose(Proposal(
+            host_id, hwpid, base_p if base_p is not None else 0x1000 + hwpid,
+            start, n_pages, perm))
+        if label is None:
+            rt.engine.release_pid(hwpid)
+            rt._grant_released(hwpid)
+            self._free_spans[host_id].append((start, n_pages))
+            raise RuntimeError(f"FM rejected grant for host {host_id}")
+        self._grants[hwpid] = (host_id, start, n_pages)
+        return hwpid, start
+
+    def _alloc_span(self, host_id: int, n_pages: int) -> int:
+        """First-fit from the host's free list (evicted tenants' spans),
+        falling back to the bump cursor; splits oversized free spans."""
+        free = self._free_spans[host_id]
+        for i, (s, n) in enumerate(free):
+            if n >= n_pages:
+                if n > n_pages:
+                    free[i] = (s + n_pages, n - n_pages)
+                else:
+                    free.pop(i)
+                return s
+        rt = self.runtimes[host_id]
+        cur = self._alloc_cursor[host_id]
+        if cur + n_pages > rt.page_hi:
+            raise RuntimeError(
+                f"host {host_id} shard [{rt.page_lo},{rt.page_hi}) exhausted")
+        self._alloc_cursor[host_id] = cur + n_pages
+        return cur
+
+    def evict(self, host_id: int, hwpid: int) -> None:
+        """Revoke every grant of `hwpid`, return it to the deployment pool
+        (one commit / one publish; index-stable tombstones), and recycle
+        its admitted page span onto the host's free list."""
+        rt = self.runtimes[host_id]
+        self.fm.revoke_hwpid(hwpid)
+        rt.engine.release_pid(hwpid)
+        rt._grant_released(hwpid)
+        span = self._grants.pop(hwpid, None)
+        if span is not None:
+            self._free_spans[span[0]].append(span[1:])
+
+    def grant_shared(self, start_page: int, n_pages: int, hwpid: int,
+                     host_id: int, *, perm: int) -> None:
+        """Grant one tenant access to a shared region (e.g. the graph
+        structure) and make that region resident on its host's checker."""
+        label = self.fm.propose(Proposal(
+            host_id, hwpid, 0x2000 + hwpid, start_page, n_pages, perm))
+        if label is None:
+            raise RuntimeError("FM rejected shared grant")
+        self.runtimes[host_id].add_resident_range(start_page, n_pages)
+
+    # -- BISnp observation ---------------------------------------------------
+    def deliver(self, host_id: int, max_events: int | None = None) -> int:
+        return self.fm.bus.deliver(host_id, max_events)
+
+    def quiesce(self) -> int:
+        """Deliver every queued BISnp at every host (fabric barrier)."""
+        return self.fm.bus.quiesce()
+
+    # -- batched cross-host egress -------------------------------------------
+    def fabric_view(self, hwpid_by_host: dict[int, int]) -> FabricView:
+        """Stacked egress operands for {host_id: tenant hwpid}, memoized per
+        (table epoch, assignment) — steady-state steps pay zero derivation,
+        any commit re-resolves once (the fabric-level leg of the epoch
+        story)."""
+        key = (self.fm.table.epoch, tuple(sorted(hwpid_by_host.items())))
+        if self._fabric_view is not None and self._fabric_view_key == key:
+            return self._fabric_view
+        host_ids = sorted(hwpid_by_host)
+        views = [self.runtimes[h].shard_view(hwpid_by_host[h])
+                 for h in host_ids]
+        self._fabric_view = stack_views(
+            views, [hwpid_by_host[h] for h in host_ids], host_ids,
+            epoch=self.fm.table.epoch)
+        self._fabric_view_key = key
+        return self._fabric_view
+
+    def step_egress(self, data, ext_addrs, hwpid_by_host: dict[int, int],
+                    *, need: int = 1, key0: int = 0xAB, key1: int = 0xCD):
+        """One fabric step: every host pulls its (B,) batch of tagged words
+        through the fused check⊕decrypt kernel in ONE batched launch.
+
+        `data` u32[H, B] / `ext_addrs` i32[H, B] are row-aligned with
+        `sorted(hwpid_by_host)`.  Returns (out u32[H, B], fault i32[H, B]).
+        """
+        from repro.kernels.fabric_egress import fabric_egress_pallas
+        view = self.fabric_view(hwpid_by_host)
+        return fabric_egress_pallas(
+            data, ext_addrs, view, need=need, key0=key0, key1=key1)
+
+    # -- accounting ----------------------------------------------------------
+    def storage_overhead(self) -> dict:
+        """Measured + worst-case metadata fractions (paper §7.2 / Eq. 3-4:
+        64 B/entry; worst case one entry per 4 KiB page = 1.5625 %)."""
+        used = int(self.fm.table.n) * 64
+        total = self.fm.sdm_pages * 4096
+        return {
+            "entries": int(self.fm.table.n),
+            "metadata_bytes": used,
+            "measured_fraction": used / total,
+            "worst_case_fraction": self.fm.storage_overhead_fraction(),
+        }
+
+    def stats(self) -> dict:
+        bus = self.fm.bus
+        return {
+            "hosts": len(self.runtimes),
+            "epoch": self.fm.epoch,
+            "bus": {"published": bus.published, "delivered": bus.delivered,
+                    "forced": bus.forced_deliveries,
+                    "max_lag": bus.max_observed_lag(),
+                    "errors": len(bus.errors)},
+            "shard_rebuilds": {h: rt.shard_rebuilds
+                               for h, rt in self.runtimes.items()},
+            # as of each host's last extraction (-1 = never extracted);
+            # deliberately NOT forcing a rebuild — stats() is read-only and
+            # must not inflate the shard_rebuilds it reports
+            "shard_entries": {
+                h: (rt._shard[0].shape[0] if rt._shard is not None else -1)
+                for h, rt in self.runtimes.items()},
+        }

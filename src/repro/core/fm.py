@@ -12,6 +12,18 @@ apply it to their `PermCache` via
 `repro.core.checker.invalidate_perm_cache` — targeted drops only, which is
 what keeps the cache's epoch fence closed and its all-hit fast path hot
 across tenant churn.
+
+Delivery is two-plane (fabric scale, see DESIGN note in `repro.core.bus`):
+every committed event is published onto the async `BISnpBus` (per-host
+ordered queues, bounded lag — how a 255-host deployment actually receives
+back-invalidates; `repro.core.fabric.HostRuntime` is the consumer) AND
+handed to the legacy synchronous `on_bisnp` listeners.  Sync listeners are
+failure-isolated: one raising handler can no longer leave the remaining
+hosts un-notified mid-iteration — the error is recorded
+(`bisnp_errors`, audit log) and the broadcast completes.  A host whose
+handler failed self-heals through the PermCache epoch fence: the next event
+it does observe reveals the epoch gap and triggers the drop-everything
+resync.
 """
 from __future__ import annotations
 
@@ -21,6 +33,7 @@ from typing import Callable, Iterator
 
 import numpy as np
 
+from .bus import BISnpBus
 from .crypto import derive_key, hmac_label
 from .space import SpaceEngine
 from .table import CommitInfo, HostTable, MAX_HWPID, perm_words_for
@@ -53,7 +66,8 @@ class FabricManager:
     """Trusted control plane for a shared-SDM deployment."""
 
     def __init__(self, sdm_pages: int, table_capacity: int,
-                 master_secret: bytes = b"space-control-fm-master"):
+                 master_secret: bytes = b"space-control-fm-master",
+                 *, max_bisnp_lag: int | None = 64):
         self._k_fm = derive_key(master_secret, "K_FM")
         self.sdm_pages = sdm_pages
         self.table = HostTable(table_capacity)
@@ -63,6 +77,10 @@ class FabricManager:
         self._free_hwpids: list[int] = list(range(1, MAX_HWPID + 1))
         self._hwpid_global: set[int] = set()
         self._bisnp_listeners: list[Callable[[BISnpEvent], None]] = []
+        # async delivery plane: HostRuntimes attach here (repro.core.fabric)
+        self.bus = BISnpBus(max_lag=max_bisnp_lag)
+        self.bisnp_errors: list[tuple[Callable, BISnpEvent,
+                                      BaseException]] = []
         self.audit_log: list[str] = []
         self._policy: Callable[[Proposal], bool] = lambda p: True
         self._txn_depth = 0
@@ -117,10 +135,13 @@ class FabricManager:
             raise
         finally:
             self._txn_depth -= 1
-        self._commit_and_broadcast()
-        for effect in self._txn_effects:
-            effect()
-        self._txn_effects.clear()
+        try:
+            self._commit_and_broadcast()
+            for effect in self._txn_effects:
+                effect()
+        finally:
+            # a failing commit must not leak staged effects into the next txn
+            self._txn_effects.clear()
 
     def _commit_and_broadcast(self) -> CommitInfo | None:
         info = self.table.commit()
@@ -220,8 +241,25 @@ class FabricManager:
         return set(self._hwpid_global)
 
     def _broadcast(self, ev: BISnpEvent) -> None:
+        """Fan one committed event out to BOTH delivery planes.
+
+        Sync listeners are failure-isolated: every listener sees the event
+        even when an earlier one raises (previously an exception aborted the
+        loop mid-iteration, leaving later hosts un-notified — their caches
+        then held stale grants with no record of it).  Errors are recorded,
+        never propagated: the table commit already happened, so the only
+        consistent forward path is to finish notifying the fabric.
+        """
+        self.bus.publish(ev)
         for fn in self._bisnp_listeners:
-            fn(ev)
+            try:
+                fn(ev)
+            except Exception as exc:  # noqa: BLE001 - must not stop fan-out
+                self.bisnp_errors.append((fn, ev, exc))
+                self.audit_log.append(
+                    f"BISNP-ERR listener={getattr(fn, '__name__', fn)!r} "
+                    f"epoch={ev.epoch} [{ev.start_page},+{ev.n_pages}): "
+                    f"{exc!r}")
 
     # -- storage accounting (paper §7.2 / Eq. 3-4) ------------------------------
     def storage_overhead_fraction(self) -> float:

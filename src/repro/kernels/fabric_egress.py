@@ -1,0 +1,153 @@
+"""Pallas kernel: fabric-wide batched egress (check ⊕ decrypt, H hosts).
+
+The single-host fused kernel (`checked_memcrypt_view_pallas`) launches once
+per host per step — at the paper's 255-host deployment that is 255 dispatches
+of identical structure.  This kernel batches the whole fabric step into ONE
+``pallas_call`` over a 2-D grid ``(host, block)``:
+
+  * each host's resident table shard (see `repro.core.fabric.HostRuntime`)
+    is one row of the stacked ``[H, N]`` entry arrays, so grid step
+    ``(h, j)`` loads host ``h``'s shard into VMEM and evaluates the same
+    two-level hierarchical search as the single-host kernel (`_hier_search`
+    is shared code);
+  * the tenant HWPID is a *dynamic* per-host operand (``hwpids[h]``) rather
+    than the single-host kernel's static argument — one compiled kernel
+    serves every host in the fleet, and admitting a tenant with a fresh
+    HWPID does not recompile;
+  * the keystream counter is the flat word position ``(h * n_blocks + j) *
+    BLOCK + lane``, exactly the single-host kernel at
+    ``base_word = h * padded_B`` — pinned by the differential test in
+    tests/test_fabric.py.
+
+Per-row semantics match ``kernels.ref.checked_memcrypt`` for that row's
+shard/hwpid bit-exactly: denied lanes read zero and carry a FAULT_* code.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.checker import (
+    FAULT_NO_ABITS,
+    FAULT_NO_ENTRY,
+    FAULT_NONE,
+    FAULT_NOT_LOCAL,
+    FAULT_PERM,
+)
+from repro.core.crypto import arx_mac32
+from repro.core.table import HWPID_SHIFT, PAGE_MASK
+from repro.kernels import bucket_pad, resolve_interpret
+from repro.kernels.memcrypt import BLOCK, _keystream
+from repro.kernels.permcheck import ENTRY_TILE, _hier_search
+
+
+def _fabric_egress_kernel(data_ref, addr_ref, hwpid_ref, starts_ref,
+                          ends_ref, permbits_ref, tmin_ref, tmax_ref,
+                          out_ref, fault_ref, *, need: int, key0: int,
+                          key1: int, n_entries: int, n_blocks: int):
+    h = pl.program_id(0)
+    j = pl.program_id(1)
+    d = data_ref[...].reshape(8, 128)
+    ext = addr_ref[...].astype(jnp.int32).reshape(8, 128)
+    hwpid = hwpid_ref[h]                       # dynamic per-host tenant tag
+    tag = ext >> HWPID_SHIFT
+    page = ext & PAGE_MASK
+    tag_ok = tag == hwpid
+
+    any_hit, idx = _hier_search(
+        page,
+        starts_ref[...].reshape(-1), ends_ref[...].reshape(-1),
+        permbits_ref[...].reshape(-1),
+        tmin_ref[...].reshape(-1), tmax_ref[...].reshape(-1),
+        n_entries // ENTRY_TILE, jnp.uint32(need))
+
+    allowed = tag_ok & any_hit
+    covered = idx >= 0
+    fault = jnp.where(
+        allowed, FAULT_NONE,
+        jnp.where(tag <= 0, FAULT_NO_ABITS,
+                  jnp.where(~tag_ok, FAULT_NOT_LOCAL,
+                            jnp.where(~covered, FAULT_NO_ENTRY, FAULT_PERM))))
+
+    line, word = _keystream(h * n_blocks + j, 0)
+    ks0, _ = arx_mac32(jnp.uint32(key0), jnp.uint32(key1), line, word)
+    out = jnp.where(allowed, d ^ ks0, jnp.uint32(0))
+    out_ref[...] = out.reshape(out_ref.shape)
+    fault_ref[...] = fault.astype(jnp.int32).reshape(fault_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("need", "key0", "key1",
+                                             "interpret"))
+def _fabric_egress_impl(data, ext, hwpids, starts, ends, permbits, tmin,
+                        tmax, *, need: int, key0: int, key1: int,
+                        interpret: bool | None):
+    interpret = resolve_interpret(interpret)
+    h, b = data.shape
+    bp = bucket_pad(b, BLOCK)
+    n_blocks = bp // BLOCK
+    buf = jnp.zeros((h, bp), jnp.uint32).at[:, :b].set(
+        jnp.asarray(data, jnp.uint32))
+    # -1 padding: tag 0 -> denied (FAULT_NO_ABITS), zero output word
+    extp = jnp.full((h, bp), -1, jnp.int32).at[:, :b].set(
+        jnp.asarray(ext, jnp.int32))
+    np_ = starts.shape[1]
+    n_tiles = tmin.shape[1]
+
+    kernel = functools.partial(
+        _fabric_egress_kernel, need=need, key0=int(key0), key1=int(key1),
+        n_entries=np_, n_blocks=n_blocks)
+    out, fault = pl.pallas_call(
+        kernel,
+        grid=(h, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, BLOCK), lambda i, j: (i, j)),
+            pl.BlockSpec((1, BLOCK), lambda i, j: (i, j)),
+            pl.BlockSpec((h,), lambda i, j: (0,)),
+            pl.BlockSpec((1, np_), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, np_), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, np_), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, n_tiles), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, n_tiles), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, BLOCK), lambda i, j: (i, j)),
+            pl.BlockSpec((1, BLOCK), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, bp), jnp.uint32),
+            jax.ShapeDtypeStruct((h, bp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(buf, extp, jnp.asarray(hwpids, jnp.int32), starts, ends, permbits,
+      tmin, tmax)
+    return out[:, :b], fault[:, :b]
+
+
+def fabric_egress_pallas(data, ext_addrs, view, *, need: int,
+                         key0: int, key1: int,
+                         interpret: bool | None = None):
+    """Batched multi-host fused egress over a `repro.core.fabric.FabricView`.
+
+    ``data`` u32[H, B] / ``ext_addrs`` i32[H, B]: row ``i`` is the step
+    batch of host ``view.host_ids[i]``, checked against that host's resident
+    shard for tenant ``view.hwpids[i]`` and decrypted with the keystream at
+    flat position ``i * padded_B + lane``.  Returns
+    ``(out u32[H, B], fault i32[H, B])``.
+    """
+    data = jnp.asarray(data, jnp.uint32)
+    ext = jnp.asarray(ext_addrs, jnp.int32)
+    if data.ndim != 2 or ext.shape != data.shape:
+        raise ValueError(
+            f"expected matching [H, B] operands, got data {data.shape} / "
+            f"ext {ext.shape}")
+    if data.shape[0] != view.starts.shape[0]:
+        raise ValueError(
+            f"{data.shape[0]} batch rows vs {view.starts.shape[0]} fabric "
+            "view hosts")
+    return _fabric_egress_impl(
+        data, ext, view.hwpids, view.starts, view.ends, view.permbits,
+        view.tile_min, view.tile_max, need=need, key0=key0, key1=key1,
+        interpret=interpret)

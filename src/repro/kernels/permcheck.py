@@ -131,16 +131,14 @@ class ShardViewCache:
         self._views.pop(key, None)
 
 
-def _match_tile(page, starts_ref, ends_ref, permbits_ref, t, needv, carry):
+def _match_tile(page, starts, ends, permbits, t, needv, carry):
     """Evaluate one ENTRY_TILE slab of the table against an (8, 128) page
-    block; shared by the flat and hierarchical kernels."""
+    block; shared by the flat, hierarchical, and fabric-batched kernels.
+    Operands are plain (n,) arrays (callers read their refs once)."""
     any_hit, idx = carry
-    s = jax.lax.dynamic_slice(starts_ref[...], (t * ENTRY_TILE,),
-                              (ENTRY_TILE,))
-    e = jax.lax.dynamic_slice(ends_ref[...], (t * ENTRY_TILE,),
-                              (ENTRY_TILE,))
-    pb = jax.lax.dynamic_slice(permbits_ref[...], (t * ENTRY_TILE,),
-                               (ENTRY_TILE,))
+    s = jax.lax.dynamic_slice(starts, (t * ENTRY_TILE,), (ENTRY_TILE,))
+    e = jax.lax.dynamic_slice(ends, (t * ENTRY_TILE,), (ENTRY_TILE,))
+    pb = jax.lax.dynamic_slice(permbits, (t * ENTRY_TILE,), (ENTRY_TILE,))
     # (8, 128, ENTRY_TILE) predicate evaluated on the VPU
     in_r = (page[..., None] >= s) & (page[..., None] < e)
     ok = in_r & (((pb & needv) == needv)[None, None, :])
@@ -160,10 +158,11 @@ def _permcheck_flat_kernel(addr_ref, starts_ref, ends_ref, permbits_ref,
 
     n_tiles = n_entries // ENTRY_TILE
     needv = jnp.uint32(need)
+    starts, ends = starts_ref[...], ends_ref[...]
+    permbits = permbits_ref[...]
 
     def tile_step(t, carry):
-        return _match_tile(page, starts_ref, ends_ref, permbits_ref, t,
-                           needv, carry)
+        return _match_tile(page, starts, ends, permbits, t, needv, carry)
 
     any_hit = jnp.zeros((8, 128), bool)
     idx = jnp.full((8, 128), -1, jnp.int32)
@@ -174,10 +173,12 @@ def _permcheck_flat_kernel(addr_ref, starts_ref, ends_ref, permbits_ref,
     idx_ref[...] = idx.reshape(idx_ref.shape)
 
 
-def _hier_search(page, starts_ref, ends_ref, permbits_ref, tmin_ref,
-                 tmax_ref, n_tiles: int, needv):
+def _hier_search(page, starts, ends, permbits, tmin, tmax,
+                 n_tiles: int, needv):
     """Two-level search over an (8, 128) page block; shared by the
-    hierarchical permcheck kernel and the fused egress kernel.
+    hierarchical permcheck kernel, the fused egress kernel, and the
+    fabric-batched multi-host kernel (operands are plain arrays — callers
+    read and reshape their refs once).
 
     Level 1: cheap (8, 128, n_tiles) overlap test against the summary.
     Sorted non-overlapping entries make the tile windows non-overlapping,
@@ -190,8 +191,6 @@ def _hier_search(page, starts_ref, ends_ref, permbits_ref, tmin_ref,
 
     Returns (any_hit bool(8,128), idx i32(8,128)).
     """
-    tmin = tmin_ref[...]
-    tmax = tmax_ref[...]
     cand = (page[..., None] >= tmin) & (page[..., None] < tmax)
     tile_needed = jnp.any(cand, axis=(0, 1))        # bool[n_tiles]
 
@@ -201,8 +200,7 @@ def _hier_search(page, starts_ref, ends_ref, permbits_ref, tmin_ref,
 
     def tile_step(t, carry):
         def heavy(c):
-            return _match_tile(page, starts_ref, ends_ref, permbits_ref, t,
-                               needv, c)
+            return _match_tile(page, starts, ends, permbits, t, needv, c)
         return jax.lax.cond(tile_needed[t], heavy, lambda c: c, carry)
 
     any_hit = jnp.zeros((8, 128), bool)
@@ -218,8 +216,9 @@ def _permcheck_hier_kernel(addr_ref, starts_ref, ends_ref, permbits_ref,
     page = ext & PAGE_MASK
     tag_ok = tag == jnp.int32(hwpid)
 
-    any_hit, idx = _hier_search(page, starts_ref, ends_ref, permbits_ref,
-                                tmin_ref, tmax_ref,
+    any_hit, idx = _hier_search(page, starts_ref[...], ends_ref[...],
+                                permbits_ref[...], tmin_ref[...],
+                                tmax_ref[...],
                                 n_entries // ENTRY_TILE, jnp.uint32(need))
 
     allowed_ref[...] = (tag_ok & any_hit).astype(jnp.uint32).reshape(

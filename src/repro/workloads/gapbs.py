@@ -284,6 +284,43 @@ def trace_cc(g: CSRGraph, iters: int = 3, cap: int = 400_000,
                  local_refs=int(len(pages) * 0.4))
 
 
+# ---------------------------------------------------------------------------
+# Egress replay (fabric-scale simulation): trace -> fixed-size kernel batches
+# ---------------------------------------------------------------------------
+
+def egress_batches(trace: Trace, *, hwpid: int, batch: int, n_steps: int,
+                   page_offset: int = 0, page_span: int | None = None):
+    """Replay a trace's SDM reference stream as A-bit tagged batches for the
+    egress kernels (`checked_memcrypt_view_pallas` /
+    `fabric_egress_pallas`).
+
+    The byte-address stream is reduced to 4 KiB page addresses in program
+    order, optionally folded into ``page_span`` pages and rebased at
+    ``page_offset`` — how a fabric host replays a shared workload against
+    its own resident shard (each host's copy of the data lives in its page
+    range).  Short traces wrap around, preserving the program-order
+    locality structure the permission cache exploits (random resampling
+    would destroy it).
+
+    Returns ``(ext i32[n_steps, batch], is_write bool[n_steps, batch])``.
+    """
+    pages = (np.asarray(trace.pages, np.int64) // PAGE)
+    writes = np.asarray(trace.is_write, bool)
+    if len(pages) == 0:
+        raise ValueError("cannot replay an empty trace")
+    if page_span is not None:
+        pages = pages % page_span
+    pages = pages + page_offset
+    need = n_steps * batch
+    reps = -(-need // len(pages))
+    pages = np.tile(pages, reps)[:need].astype(np.int64)
+    writes = np.tile(writes, reps)[:need]
+    from repro.core.table import HWPID_SHIFT, PAGE_MASK
+    ext = ((np.int64(hwpid) << HWPID_SHIFT) | (pages & PAGE_MASK)).astype(
+        np.int32)
+    return ext.reshape(n_steps, batch), writes.reshape(n_steps, batch)
+
+
 TRACES = {"pr": trace_pr, "bfs": trace_bfs, "bc": trace_bc, "tc": trace_tc,
           "cc": trace_cc}
 KERNELS = ["pr", "bfs", "bc", "tc", "cc"]

@@ -1,0 +1,426 @@
+"""Fabric-scale subsystem: async BISnp bus properties (delivery order,
+bounded lag, quiesce), sync-broadcast failure isolation, the async-vs-sync
+convergence differential, page-range table sharding, and the batched
+multi-host egress kernel against the reference oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    BISnpBus,
+    FabricManager,
+    PERM_R,
+    PERM_RW,
+    Proposal,
+    ShardedFabric,
+    invalidate_perm_cache,
+    pack_ext_addr,
+)
+from repro.core.checker import cached_check_access_jit, make_perm_cache
+from repro.core.fm import BISnpEvent
+from repro.kernels import bucket_pad, ref
+from repro.kernels.memcrypt import BLOCK, checked_memcrypt_view_pallas
+
+
+def _ev(epoch, start=0, n=4, min_idx=None):
+    return BISnpEvent(start, n, epoch=epoch, min_entry_idx=min_idx)
+
+
+# ---------------------------------------------------------------------------
+# BISnpBus properties
+# ---------------------------------------------------------------------------
+
+def test_bus_delivery_order_per_host():
+    bus = BISnpBus(max_lag=None)
+    seen = {0: [], 1: []}
+    bus.attach(0, seen[0].append)
+    bus.attach(1, seen[1].append)
+    events = [_ev(e) for e in range(1, 6)]
+    for ev in events:
+        bus.publish(ev)
+    assert bus.lag(0) == bus.lag(1) == 5
+    # partial delivery preserves publish order
+    assert bus.deliver(0, 2) == 2
+    assert [e.epoch for e in seen[0]] == [1, 2]
+    assert bus.drain(0) == 3
+    assert [e.epoch for e in seen[0]] == [1, 2, 3, 4, 5]
+    # host 1 untouched until its own delivery
+    assert seen[1] == []
+    bus.quiesce()
+    assert [e.epoch for e in seen[1]] == [1, 2, 3, 4, 5]
+
+
+def test_bus_bounded_lag_forces_delivery():
+    bus = BISnpBus(max_lag=4)
+    seen = []
+    bus.attach(7, seen.append)
+    for e in range(1, 11):
+        bus.publish(_ev(e))
+        assert bus.lag(7) <= 4          # the invariant
+    assert bus.forced_deliveries == 6   # 10 published, bound of 4 queued
+    assert [e.epoch for e in seen] == [1, 2, 3, 4, 5, 6]  # oldest first
+    bus.drain()
+    assert [e.epoch for e in seen] == list(range(1, 11))
+
+
+def test_bus_quiesce_empties_every_queue():
+    bus = BISnpBus(max_lag=None)
+    seen = {h: [] for h in range(5)}
+    for h in seen:
+        bus.attach(h, seen[h].append)
+    for e in range(1, 8):
+        bus.publish(_ev(e))
+    bus.deliver(2, 3)   # ragged progress across hosts
+    bus.deliver(4, 1)
+    n = bus.quiesce()
+    assert n == 5 * 7 - 3 - 1
+    for h in seen:
+        assert [e.epoch for e in seen[h]] == list(range(1, 8))
+        assert bus.lag(h) == 0
+    assert bus.delivered == bus.published * 5
+
+
+def test_bus_handler_failure_is_isolated():
+    bus = BISnpBus(max_lag=None)
+    seen = []
+    bus.attach(0, lambda ev: (_ for _ in ()).throw(RuntimeError("boom")))
+    bus.attach(1, seen.append)
+    bus.publish(_ev(1))
+    bus.quiesce()       # must not raise
+    assert [e.epoch for e in seen] == [1]
+    assert len(bus.errors) == 1 and bus.errors[0][0] == 0
+    assert bus.lag(0) == 0   # the event still counts as consumed
+
+
+def test_bus_attach_detach():
+    bus = BISnpBus()
+    bus.attach(3, lambda ev: None)
+    with pytest.raises(ValueError):
+        bus.attach(3, lambda ev: None)
+    bus.publish(_ev(1))
+    bus.detach(3)
+    assert bus.hosts == ()
+    bus.publish(_ev(2))   # no queues: no-op
+    assert bus.published == 2 and bus.delivered == 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite fix: FM sync broadcast must not stop mid-iteration
+# ---------------------------------------------------------------------------
+
+def test_broadcast_isolates_listener_failures():
+    """Regression: an exception in one host's handler used to abort the
+    listener loop, leaving later hosts un-notified (stale caches with no
+    record).  Now every listener sees the event and the error is logged."""
+    fm = FabricManager(sdm_pages=1 << 12, table_capacity=64)
+    h0 = fm.enroll_host(0)
+    got = []
+
+    def bad(ev):
+        raise RuntimeError("host 0 handler crashed")
+
+    fm.on_bisnp(bad)
+    fm.on_bisnp(got.append)
+    pid = h0.get_next_pid()
+    label = fm.propose(Proposal(0, pid, 1, 0, 16, PERM_RW))  # must not raise
+    assert label is not None
+    assert len(got) == 1 and got[0].epoch == 1
+    assert len(fm.bisnp_errors) == 1
+    assert any("BISNP-ERR" in line for line in fm.audit_log)
+    # FM state stayed consistent: the grant is live and queryable
+    assert pid in fm.hwpid_global()
+
+
+# ---------------------------------------------------------------------------
+# Differential: async bus converges to the synchronous broadcast
+# ---------------------------------------------------------------------------
+
+def _host_consumer(holder):
+    """The HostRuntime BISnp policy (index-shifting commits flush index
+    mappings; index-stable commits stay targeted), as a cache updater."""
+    def on_ev(ev):
+        min_shifted = None if ev.min_entry_idx is None else 0
+        holder["cache"] = invalidate_perm_cache(
+            holder["cache"], ev.start_page, ev.n_pages, ev.epoch,
+            min_shifted_entry=min_shifted)
+    return on_ev
+
+
+@pytest.mark.parametrize("schedule_seed", [0, 1, 2])
+def test_async_converges_to_sync_broadcast(schedule_seed):
+    """Identical event sequences through (a) inline synchronous application
+    and (b) the bus under a random partial-delivery schedule + quiesce must
+    leave byte-identical PermCache state and identical verdicts."""
+    rng = np.random.default_rng(schedule_seed)
+    fm = FabricManager(sdm_pages=1 << 14, table_capacity=1024)
+    h0 = fm.enroll_host(0)
+    sync = {"cache": make_perm_cache(4096, epoch=fm.epoch)}
+    asyn = {"cache": make_perm_cache(4096, epoch=fm.epoch)}
+    fm.on_bisnp(_host_consumer(sync))
+    fm.bus.attach(0, _host_consumer(asyn))
+
+    # ground state: tenants granted + both caches warmed identically
+    pids = [h0.get_next_pid() for _ in range(6)]
+    for i, pid in enumerate(pids):
+        fm.propose(Proposal(0, pid, 1 + i, 64 * i, 48, PERM_RW))
+    fm.bus.drain()
+    table = fm.table.to_device()
+    for i, pid in enumerate(pids):
+        ext = pack_ext_addr(np.full(32, pid, np.int32),
+                            (64 * i + rng.integers(0, 48, 32)).astype(
+                                np.int32))
+        wr = jnp.zeros(32, bool)
+        _, sync["cache"] = cached_check_access_jit(
+            table, jnp.asarray(np.full(4, 0xFFFFFFFF, np.uint32)), ext, wr,
+            sync["cache"])
+        _, asyn["cache"] = cached_check_access_jit(
+            table, jnp.asarray(np.full(4, 0xFFFFFFFF, np.uint32)), ext, wr,
+            asyn["cache"])
+
+    # churn: revokes (index-stable), partial releases, an insert, a vacuum —
+    # async deliveries interleave randomly, then the fabric quiesces
+    ops = [lambda: fm.revoke_hwpid(pids[0]),
+           lambda: fm.release_range(pids[1], 64, 16),
+           lambda: fm.propose(Proposal(0, pids[5], 9, 512, 32, PERM_R)),
+           lambda: fm.revoke_hwpid(pids[2]),
+           lambda: fm.vacuum()]
+    for op in ops:
+        op()
+        if rng.integers(0, 2):
+            fm.bus.deliver(0, int(rng.integers(0, 3)))
+    fm.bus.quiesce()
+
+    a, b = sync["cache"], asyn["cache"]
+    assert int(a.epoch) == int(b.epoch) == fm.epoch
+    np.testing.assert_array_equal(np.asarray(a.tag), np.asarray(b.tag))
+    np.testing.assert_array_equal(np.asarray(a.entry), np.asarray(b.entry))
+    # and identical verdicts on a fresh probe sweep
+    table = fm.table.to_device()
+    ext = pack_ext_addr(
+        np.repeat(pids, 16).astype(np.int32),
+        np.tile(rng.integers(0, 1 << 10, 16), len(pids)).astype(np.int32))
+    wr = jnp.zeros(ext.shape, bool)
+    local = jnp.asarray(np.full(4, 0xFFFFFFFF, np.uint32))
+    ra, a2 = cached_check_access_jit(table, local, ext, wr, a)
+    rb, b2 = cached_check_access_jit(table, local, ext, wr, b)
+    np.testing.assert_array_equal(np.asarray(ra.allowed),
+                                  np.asarray(rb.allowed))
+    np.testing.assert_array_equal(np.asarray(ra.fault), np.asarray(rb.fault))
+
+
+# ---------------------------------------------------------------------------
+# Sharded fabric: residency, lag safety, batched egress vs oracle
+# ---------------------------------------------------------------------------
+
+def _mk_fabric(n_hosts=4, span=64):
+    fab = ShardedFabric(sdm_pages=1 << 14, table_capacity=2048,
+                        n_shards=n_hosts)
+    rts = [fab.enroll(h) for h in range(n_hosts)]
+    tenants = {h: fab.admit(h, span) for h in range(n_hosts)}
+    fab.quiesce()
+    return fab, rts, tenants
+
+
+def test_shard_residency_and_cross_shard_denial():
+    fab, rts, tenants = _mk_fabric()
+    h = 2
+    pid, start = tenants[h]
+    ext = pack_ext_addr(np.full(16, pid, np.int32),
+                        (start + np.arange(16)).astype(np.int32))
+    res = rts[h].check(ext, jnp.zeros(16, bool))
+    assert bool(res.allowed.all())
+    # another shard's granted pages are NOT resident here: no entry -> fault
+    opid, ostart = tenants[0]
+    ext2 = pack_ext_addr(np.full(4, pid, np.int32),
+                         (ostart + np.arange(4)).astype(np.int32))
+    res2 = rts[h].check(ext2, jnp.zeros(4, bool))
+    assert not bool(res2.allowed.any())
+    # each host's shard holds only its own entries
+    assert all(rt.shard_entries() == 1 for rt in rts)
+
+
+def test_shared_range_becomes_resident():
+    fab, rts, tenants = _mk_fabric()
+    pid, _ = tenants[1]
+    # a "graph structure" region living in host 0's shard, shared read-only
+    shared_lo = 8
+    fab.grant_shared(shared_lo, 16, pid, 1, perm=PERM_R)
+    fab.quiesce()
+    ext = pack_ext_addr(np.full(8, pid, np.int32),
+                        (shared_lo + np.arange(8)).astype(np.int32))
+    res = rts[1].check(ext, jnp.zeros(8, bool))
+    assert bool(res.allowed.all())
+    # write to the read-only shared range still denied
+    resw = rts[1].check(ext, jnp.ones(8, bool))
+    assert not bool(resw.allowed.any())
+    assert rts[1].shard_entries() == 2
+
+
+def test_add_resident_range_drops_same_epoch_memos():
+    """Regression: residency changes don't move the table epoch, so every
+    epoch-keyed memo (per-tenant views, the fabric-level stacked view) must
+    be dropped explicitly or checks keep spuriously denying the new range."""
+    fab, rts, tenants = _mk_fabric()
+    pid1, _ = tenants[1]
+    pid0, start0 = tenants[0]
+    # grant committed FIRST (epoch bumps), caches then warmed at that epoch
+    fab.fm.propose(Proposal(1, pid1, 0x99, start0, 8, PERM_R))
+    fab.quiesce()
+    hw = {h: tenants[h][0] for h in tenants}
+    v_before = fab.fabric_view(hw)
+    _ = rts[1].shard_view(pid1)
+    # residency added at the SAME epoch: derived state must re-resolve
+    rts[1].add_resident_range(start0, 8)
+    assert rts[1].shard_entries() == 2
+    ext = pack_ext_addr(np.full(4, pid1, np.int32),
+                        (start0 + np.arange(4)).astype(np.int32))
+    assert bool(rts[1].check(ext, jnp.zeros(4, bool)).allowed.all())
+    view = rts[1].shard_view(pid1)
+    page_hits = (np.asarray(view.starts) <= start0) & \
+        (np.asarray(view.ends) > start0)
+    assert page_hits.any()
+    assert fab.fabric_view(hw) is not v_before
+
+
+def test_lagging_host_never_trusts_stale_grants():
+    """Revocation committed but NOT yet delivered: the lagging host's fence
+    is open, so cached hits revalidate against the live shard and the
+    revoked tenant is denied — before and after delivery."""
+    fab, rts, tenants = _mk_fabric()
+    h = 1
+    pid, start = tenants[h]
+    ext = pack_ext_addr(np.full(8, pid, np.int32),
+                        (start + np.arange(8)).astype(np.int32))
+    assert bool(rts[h].check(ext, jnp.zeros(8, bool)).allowed.all())
+    fab.fm.revoke_hwpid(pid)          # committed; queued, not delivered
+    assert rts[h].lag() == 1
+    res = rts[h].check(ext, jnp.zeros(8, bool))
+    assert not bool(res.allowed.any())
+    fab.deliver(h)
+    res2 = rts[h].check(ext, jnp.zeros(8, bool))
+    assert not bool(res2.allowed.any())
+    assert int(rts[h].permcache.epoch) == fab.fm.epoch
+
+
+def test_fabric_view_memoized_per_epoch():
+    fab, rts, tenants = _mk_fabric()
+    hw = {h: tenants[h][0] for h in tenants}
+    v1 = fab.fabric_view(hw)
+    assert fab.fabric_view(hw) is v1          # steady state: zero derivation
+    fab.fm.revoke_hwpid(tenants[3][0])        # epoch bump
+    v2 = fab.fabric_view(hw)
+    assert v2 is not v1 and v2.epoch == fab.fm.epoch
+
+
+def test_fabric_egress_matches_reference_oracle():
+    """Every row of the batched multi-host kernel must match the per-host
+    composition of the permcheck and memcrypt oracles bit-exactly —
+    including denied lanes (forged tag, out-of-shard page, write to R)."""
+    rng = np.random.default_rng(0)
+    fab, rts, tenants = _mk_fabric(n_hosts=3, span=48)
+    b = 256
+    hw = {h: tenants[h][0] for h in tenants}
+    host_ids = sorted(hw)
+    data = rng.integers(0, 1 << 32, (3, b), dtype=np.uint32)
+    ext = np.zeros((3, b), np.int32)
+    for i, h in enumerate(host_ids):
+        pid, start = tenants[h]
+        pages = start + rng.integers(-8, 56, b)   # some out-of-grant pages
+        tags = np.full(b, pid, np.int32)
+        tags[::17] = 0                             # untagged lanes
+        tags[3::23] = (pid % 127) + 1 if (pid % 127) + 1 != pid else 126
+        ext[i] = np.asarray(pack_ext_addr(tags, pages.astype(np.int32)))
+    out, fault = fab.step_egress(data, ext, hw, need=1)
+    bp = bucket_pad(b, BLOCK)
+    for i, h in enumerate(host_ids):
+        view = rts[h].shard_view(hw[h])
+        o_ref, f_ref = ref.checked_memcrypt(
+            data[i], ext[i], view.starts, view.ends, view.permbits,
+            hwpid=hw[h], need=1, key0=0xAB, key1=0xCD, base_word=i * bp)
+        np.testing.assert_array_equal(np.asarray(out[i]), np.asarray(o_ref))
+        np.testing.assert_array_equal(np.asarray(fault[i]),
+                                      np.asarray(f_ref))
+    # and the single-host fused kernel agrees with the batched rows
+    i, h = 0, host_ids[0]
+    view = rts[h].shard_view(hw[h])
+    o1, f1 = checked_memcrypt_view_pallas(
+        data[i], ext[i], view, hwpid=hw[h], need=1, key0=0xAB, key1=0xCD,
+        base_word=i * bp)
+    np.testing.assert_array_equal(np.asarray(out[i]), np.asarray(o1))
+    np.testing.assert_array_equal(np.asarray(fault[i]), np.asarray(f1))
+
+
+def test_evict_readmit_reuses_pages_and_hwpid_pool():
+    fab, rts, tenants = _mk_fabric()
+    pid, start = tenants[0]
+    fab.evict(0, pid)
+    fab.quiesce()
+    ext = pack_ext_addr(np.full(4, pid, np.int32),
+                        (start + np.arange(4)).astype(np.int32))
+    assert not bool(rts[0].check(ext, jnp.zeros(4, bool)).allowed.any())
+    # the freed HWPID returns through the deployment pool eventually
+    pid2, start2 = fab.admit(0, 8)
+    fab.quiesce()
+    ext2 = pack_ext_addr(np.full(4, pid2, np.int32),
+                         (start2 + np.arange(4)).astype(np.int32))
+    assert bool(rts[0].check(ext2, jnp.zeros(4, bool)).allowed.all())
+
+
+def test_shard_rank_shift_without_global_index_shift():
+    """Regression: a count-preserving geometry change (revoke_range that
+    splits one entry and coalesces the remainder into its neighbor) reports
+    min_shifted_entry=None, yet can grow an entry INTO a host's resident
+    range — shifting the shard-local rank of every later entry.  The host
+    must flush its cached page->rank mappings on membership change or a
+    fenced hit denies a valid, untouched grant (FAULT_NO_ENTRY)."""
+    fab = ShardedFabric(sdm_pages=16, table_capacity=64, n_shards=4)
+    rt0 = fab.enroll(0)   # resident partition: pages [0, 4)
+    a = fab.assign_hwpid(0)
+    b = fab.assign_hwpid(0)
+    c = fab.assign_hwpid(0)
+    # E0=[0,4){A,B}, E1=[4,8){A}, E2=[8,12){C}; E2 resident via shared range
+    assert fab.fm.propose(Proposal(0, a, 1, 0, 4, PERM_RW)) is not None
+    assert fab.fm.propose(Proposal(0, b, 2, 0, 4, PERM_RW)) is not None
+    assert fab.fm.propose(Proposal(0, a, 3, 4, 4, PERM_RW)) is not None
+    fab.grant_shared(8, 4, c, 0, perm=PERM_RW)
+    fab.quiesce()
+    # warm the cache: C's page 8 lands at shard-local rank 1 ({E0, E2})
+    ext_c = pack_ext_addr(np.full(4, c, np.int32),
+                          (8 + np.arange(4)).astype(np.int32))
+    assert bool(rt0.check(ext_c, jnp.zeros(4, bool)).allowed.all())
+    assert rt0.shard_entries() == 2
+    # B releases [2,4): E0 splits, the cleared tail coalesces into E1 ->
+    # [0,2){A,B}, [2,8){A}, [8,12){C} — count unchanged (index-stable
+    # globally) but [2,8) now overlaps the resident range: E2's rank 1 -> 2
+    fab.fm.release_range(b, 2, 2)
+    fab.quiesce()
+    assert fab.fm.table.last_commit.min_shifted_entry is None
+    assert rt0.shard_entries() == 3
+    # C's untouched grant must still be allowed through the fenced cache
+    res = rt0.check(ext_c, jnp.zeros(4, bool))
+    assert bool(res.allowed.all()), f"false denial: faults {res.fault}"
+    assert int(rt0.permcache.epoch) == fab.fm.epoch
+
+
+def test_admit_evict_churn_never_exhausts_the_shard():
+    """Regression: the page allocator recycles evicted spans (free-list
+    first-fit), so unbounded admit/evict churn on one host succeeds and
+    keeps reusing the same page range."""
+    fab = ShardedFabric(sdm_pages=1 << 10, table_capacity=256, n_shards=4)
+    fab.enroll(0)
+    pid, start0 = fab.admit(0, 64)   # shard is 256 pages: 4 spans max
+    for _ in range(16):
+        fab.evict(0, pid)
+        pid, start = fab.admit(0, 64)
+        assert start == start0       # the freed span is reused first-fit
+    fab.quiesce()
+
+
+def test_shard_range_partition_covers_sdm():
+    fab = ShardedFabric(sdm_pages=1000, table_capacity=64, n_shards=7)
+    ranges = [fab.shard_range(h) for h in range(7)]
+    assert ranges[0][0] == 0 and ranges[-1][1] == 1000
+    for (a_lo, a_hi), (b_lo, b_hi) in zip(ranges, ranges[1:]):
+        assert a_hi == b_lo and a_lo < a_hi
+    with pytest.raises(ValueError):
+        fab.shard_range(7)
