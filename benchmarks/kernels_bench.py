@@ -1,20 +1,31 @@
 """Kernel microbenchmarks: wall-clock on this host + derived per-access
 costs.  On CPU both Pallas variants run through the interpreter (the same
-jax-ops graph XLA compiles), so flat-vs-hier and fused-vs-unfused ratios
-measure real work skipped; on TPU hardware the same harness times the
-compiled kernels.
+jax-ops graph XLA compiles), so flat-vs-hier-vs-adaptive and
+fused-vs-unfused ratios measure real work skipped; on TPU hardware the same
+harness times the compiled kernels.
 
 CLI (the CI entry point):
 
     PYTHONPATH=src python benchmarks/kernels_bench.py [--smoke] \
         [--out BENCH_kernels.json] [--only NAME] [--repeats N] [--seed S]
 
-writes one JSON with every bench's rows, including the before/after
-permcheck (flat vs hierarchical), fused-egress, and tenant-churn timings.
-Every timing is the MEDIAN of ``--repeats`` independent repetitions (each
-itself a mean over `iters` calls) — CPU wall-clock is noisy enough that
-single-shot numbers are useless for trajectory comparisons; medians with
-fixed seeds make successive runs comparable.
+writes one JSON with every bench's rows, including the permcheck mode
+matrix (flat / hier / adaptive on hot, uniform, and conflict traces, with
+the adaptive selector's chosen mode recorded per trace), fused-egress,
+perm-cache (4-way vs direct-mapped), and tenant-churn timings.
+
+Methodology notes baked into the harness:
+
+  * Competing variants of one comparison are timed INTERLEAVED
+    (`_time_each`): each repetition round times every variant once before
+    the next round, and per-variant medians are taken across rounds.
+    Back-to-back runs of the same interpret-mode kernel drift by tens of
+    percent on a shared CPU; interleaving makes the drift common-mode so
+    the ratios are stable.
+  * Table operands are passed as RUNTIME jit arguments, never closed over:
+    epoch churn re-binds the shard operands at every commit in real
+    serving, and closing over them lets XLA constant-fold the table into
+    the kernel — a specialization no serving path can use.
 """
 from __future__ import annotations
 
@@ -27,8 +38,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.memcrypt import checked_memcrypt_pallas, memcrypt_pallas
-from repro.kernels.permcheck import permcheck_pallas
+from repro.kernels.memcrypt import (BLOCK, SUPER_BLOCKS,
+                                    checked_memcrypt_pallas, memcrypt_pallas)
+from repro.kernels.permcheck import (ENTRY_TILE, make_shard_view,
+                                     permcheck_pallas, selected_mode)
 
 SMOKE = False
 REPEATS = 3
@@ -49,6 +62,37 @@ def _time(fn, *args, iters=3, warmup=2):
     return float(np.median(reps))
 
 
+def _time_each(fns: dict, iters=3, warmup=2) -> dict:
+    """Interleaved timing for competing variants: every repetition round
+    times each variant once, so machine-load drift hits all variants
+    equally.  Returns the raw per-round times (us) per variant — take
+    medians with `_med` and paired speedups with `_ratio`."""
+    for fn in fns.values():
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+    reps = {k: [] for k in fns}
+    for _ in range(REPEATS):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn()
+            jax.block_until_ready(out)
+            reps[k].append((time.perf_counter() - t0) / iters * 1e6)
+    return reps
+
+
+def _med(reps: dict) -> dict:
+    return {k: float(np.median(v)) for k, v in reps.items()}
+
+
+def _ratio(reps: dict, num: str, den: str) -> float:
+    """Median of per-round ratios: each interleaved round yields one
+    paired num/den sample, so between-round drift cancels exactly —
+    steadier than the ratio of two independent medians when the variants
+    are close."""
+    return float(np.median([a / b for a, b in zip(reps[num], reps[den])]))
+
+
 def _mk_shard(rng, n_entries, sdm_pages):
     bounds = np.sort(rng.choice(sdm_pages, 2 * n_entries, replace=False))
     return (jnp.asarray(bounds[0::2], jnp.int32),
@@ -56,90 +100,133 @@ def _mk_shard(rng, n_entries, sdm_pages):
             jnp.asarray(rng.integers(0, 4, n_entries), jnp.uint32))
 
 
-def _clustered_ext(rng, starts, ends, batch, hwpid, hot_regions=4):
-    """Hot-region access trace: the batch touches a handful of granted
-    ranges (the locality the paper's 16 KiB cache exploits), instead of
-    uniform pages across the whole SDM."""
-    s = np.asarray(starts)
-    e = np.asarray(ends)
-    hot = rng.choice(s.shape[0], min(hot_regions, s.shape[0]), replace=False)
-    pick = rng.choice(hot, batch)
-    span = np.maximum(e[pick] - s[pick], 1)
-    pages = (s[pick] + rng.integers(0, 1 << 30, batch) % span).astype(np.int32)
+def _pages_from_entries(rng, starts, ends, pick):
+    span = np.maximum(np.asarray(ends)[pick] - np.asarray(starts)[pick], 1)
+    return (np.asarray(starts)[pick]
+            + rng.integers(0, 1 << 30, len(pick)) % span).astype(np.int32)
+
+
+def _hot_ext(rng, starts, ends, batch, hwpid, regions=4):
+    """Hot trace confined to one summary tile: `regions` consecutive
+    granted ranges inside a single ENTRY_TILE stripe (a tenant hammering a
+    few co-located tensors — the locality both the 16 KiB cache and the
+    hierarchical search exploit)."""
+    n = np.asarray(starts).shape[0]
+    tile = int(rng.integers(0, max(n // ENTRY_TILE, 1)))
+    base = tile * ENTRY_TILE + int(
+        rng.integers(0, max(min(ENTRY_TILE, n) - regions, 1)))
+    pick = base + rng.integers(0, regions, batch)
+    pages = _pages_from_entries(rng, starts, ends, pick)
+    return jnp.asarray((hwpid << 24) | pages, jnp.int32)
+
+
+def _conflict_ext(rng, starts, ends, batch, hwpid):
+    """Adversarial anti-locality trace: one hot entry per summary tile, so
+    every kernel step needs every tile — the hierarchical candidate pass
+    finds nothing to skip and becomes pure overhead.  The adaptive
+    selector must fall back to flat here."""
+    n_tiles = max(np.asarray(starts).shape[0] // ENTRY_TILE, 1)
+    per_tile = (np.arange(n_tiles) * ENTRY_TILE
+                + rng.integers(0, ENTRY_TILE, n_tiles))
+    pick = per_tile[rng.integers(0, n_tiles, batch)]
+    pages = _pages_from_entries(rng, starts, ends, pick)
     return jnp.asarray((hwpid << 24) | pages, jnp.int32)
 
 
 def bench_permcheck() -> dict:
-    """Before/after: brute-force full-scan kernel vs two-level hierarchical
-    kernel, on hot-region and uniform traces."""
+    """Mode matrix: full-scan (flat) vs two-level (hier) vs the adaptive
+    selector, on hot / uniform / conflict traces.  The headline metric is
+    ``speedup_x = flat / adaptive`` — adaptivity should never lose to the
+    always-flat baseline, and should keep the hier win where it exists."""
     rng = np.random.default_rng(SEED)
     sdm_pages = 1 << 22
-    batch = 1024 if SMOKE else 4096
+    batch = 4096 if SMOKE else 16384
     sizes = [4096, 16384] if SMOKE else [4096, 16384, 65536]
     out = {}
     for n_entries in sizes:
         starts, ends, perms = _mk_shard(rng, n_entries, sdm_pages)
-        ext_hot = _clustered_ext(rng, starts, ends, batch, hwpid=3)
-        ext_uni = jnp.asarray(
-            (3 << 24) | rng.integers(0, sdm_pages, batch), jnp.int32)
+        view = make_shard_view(starts, ends, perms)
+        traces = {
+            "hot": _hot_ext(rng, starts, ends, batch, hwpid=3),
+            "uniform": jnp.asarray(
+                (3 << 24) | rng.integers(0, sdm_pages, batch), jnp.int32),
+            "conflict": _conflict_ext(rng, starts, ends, batch, hwpid=3),
+        }
         row = {}
-        for trace, ext in (("hot", ext_hot), ("uniform", ext_uni)):
-            us_flat = _time(lambda e=ext: permcheck_pallas(
-                e, starts, ends, perms, hwpid=3, need=1, mode="flat"))
-            us_hier = _time(lambda e=ext: permcheck_pallas(
-                e, starts, ends, perms, hwpid=3, need=1, mode="hier"))
+        for trace, ext in traces.items():
+            reps = _time_each({
+                mode: (lambda e=ext, m=mode: permcheck_pallas(
+                    e, starts, ends, perms, hwpid=3, need=1, mode=m))
+                for mode in ("flat", "hier", "adaptive")})
+            times = _med(reps)
             row[trace] = {
-                "flat_us": round(us_flat, 1),
-                "hier_us": round(us_hier, 1),
-                "speedup_x": round(us_flat / us_hier, 2),
-                "hier_ns_per_access": round(us_hier * 1e3 / batch, 2),
+                "flat_us": round(times["flat"], 1),
+                "hier_us": round(times["hier"], 1),
+                "adaptive_us": round(times["adaptive"], 1),
+                "chosen_mode": selected_mode(ext, view),
+                "speedup_x": round(_ratio(reps, "flat", "adaptive"), 2),
+                "hier_speedup_x": round(_ratio(reps, "flat", "hier"), 2),
+                "adaptive_ns_per_access": round(
+                    times["adaptive"] * 1e3 / batch, 2),
             }
-        us_ref = _time(lambda: ref.permcheck(ext_hot, starts, ends, perms,
-                                             hwpid=3, need=1))
+        us_ref = _time(lambda: ref.permcheck(
+            traces["hot"], starts, ends, perms, hwpid=3, need=1))
         row["ref_us"] = round(us_ref, 1)
         out[f"B{batch}_N{n_entries}"] = row
     return {"bench": "permcheck", "rows": out,
-            "note": "flat = pre-refactor full scan; hier = two-level "
-                    "summary search. Both Pallas (interpret on CPU, "
-                    "compiled on TPU); 'hot' = 4-region locality trace."}
+            "note": "flat = full scan; hier = two-level summary search; "
+                    "adaptive = per-batch selector (chosen_mode records "
+                    "its decision). speedup_x = flat/adaptive. 'hot' = "
+                    "single-tile locality, 'conflict' = one hot entry per "
+                    "tile (hier worst case). Interleaved timing."}
 
 
 def bench_fused_egress() -> dict:
     """Fused permcheck⊕memcrypt single launch vs the two-launch pipeline
-    over the same words."""
+    over the same words.  Both sides take the table shard as runtime jit
+    operands (see module docstring); the fused kernel streams
+    SUPER_BLOCKS x BLOCK words per grid step."""
     rng = np.random.default_rng(SEED)
     sdm_pages = 1 << 22
-    n_entries = 1024 if SMOKE else 4096
+    n_entries = 4096
     n_words = 1 << 14 if SMOKE else 1 << 16
     starts, ends, perms = _mk_shard(rng, n_entries, sdm_pages)
-    ext = _clustered_ext(rng, starts, ends, n_words, hwpid=3)
+    ext = _hot_ext(rng, starts, ends, n_words, hwpid=3)
     data = jnp.asarray(rng.integers(0, 1 << 32, n_words, dtype=np.uint32))
 
     @jax.jit
-    def two_launch(d, e):
-        allowed, _ = permcheck_pallas(e, starts, ends, perms, hwpid=3,
-                                      need=1)
+    def two_launch(d, e, s, en, pb):
+        allowed, _ = permcheck_pallas(e, s, en, pb, hwpid=3, need=1)
         dec = memcrypt_pallas(d, key0=0xAB, key1=0xCD)
         return jnp.where(allowed, dec, jnp.uint32(0))
 
     @jax.jit
-    def fused(d, e):
-        out, _ = checked_memcrypt_pallas(d, e, starts, ends, perms, hwpid=3,
+    def fused(d, e, s, en, pb):
+        out, _ = checked_memcrypt_pallas(d, e, s, en, pb, hwpid=3,
                                          need=1, key0=0xAB, key1=0xCD)
         return out
 
-    np.testing.assert_array_equal(np.asarray(two_launch(data, ext)),
-                                  np.asarray(fused(data, ext)))
-    us_two = _time(two_launch, data, ext)
-    us_fused = _time(fused, data, ext)
+    np.testing.assert_array_equal(
+        np.asarray(two_launch(data, ext, starts, ends, perms)),
+        np.asarray(fused(data, ext, starts, ends, perms)))
+    reps = _time_each({
+        "two_launch": lambda: two_launch(data, ext, starts, ends, perms),
+        "fused": lambda: fused(data, ext, starts, ends, perms)})
+    times = _med(reps)
+    sb = min(SUPER_BLOCKS, max(n_words // BLOCK, 1))
+    view = make_shard_view(starts, ends, perms)
     return {
         "bench": "fused_egress",
         "n_words": n_words,
         "n_entries": n_entries,
-        "two_launch_us": round(us_two, 1),
-        "fused_us": round(us_fused, 1),
-        "speedup_x": round(us_two / us_fused, 2),
-        "note": "check+decrypt over the same words: two pallas_calls vs one",
+        "super_blocks": sb,
+        "chosen_mode": selected_mode(ext, view, block=sb * BLOCK),
+        "two_launch_us": round(times["two_launch"], 1),
+        "fused_us": round(times["fused"], 1),
+        "speedup_x": round(_ratio(reps, "two_launch", "fused"), 2),
+        "note": "check+decrypt over the same words: two pallas_calls vs "
+                "one fused launch streaming super_blocks x 1024 words per "
+                "grid step; tables are runtime operands on both sides",
     }
 
 
@@ -158,9 +245,35 @@ def bench_memcrypt() -> dict:
     return {"bench": "memcrypt", "rows": out}
 
 
+def _aliasing_pages(starts: np.ndarray) -> np.ndarray:
+    """16 groups x 4 pages drawn from the table's entry starts.  Within a
+    group every page shares its low-8-bit residue — the same set of a
+    256-set direct-mapped cache, so the four aliases thrash one slot —
+    while the 16 groups land in 16 distinct sets of the 64-set 4-way
+    cache, whose 4 ways hold each group whole (steady state all-hit)."""
+    by_res: dict[int, list[int]] = {}
+    for p in starts:
+        by_res.setdefault(int(p) & 255, []).append(int(p))
+    groups, used64 = [], set()
+    for r, ps in sorted(by_res.items(),
+                        key=lambda kv: (-len(kv[1]), kv[0])):
+        if len(ps) >= 4 and (r & 63) not in used64:
+            used64.add(r & 63)
+            groups.append(sorted(ps)[:4])
+        if len(groups) == 16:
+            break
+    if len(groups) < 16:
+        raise RuntimeError(
+            f"only {len(groups)} aliasing groups in {len(starts)} entries; "
+            "raise n_entries")
+    return np.asarray([p for g in groups for p in g], np.int32)
+
+
 def bench_perm_cache() -> dict:
     """Framework-level checker: binary search every batch vs the vectorized
-    permission-cache fast path on a hot-working-set trace."""
+    permission-cache fast path, for the 4-way x 64-set default and the old
+    direct-mapped (256-set) layout, on a fitting and a set-aliasing trace.
+    """
     from repro.core import PERM_RW, HostTable, make_hwpid_local, perm_words_for
     from repro.core.checker import (cached_check_access_jit, check_access_jit,
                                     make_perm_cache)
@@ -177,11 +290,11 @@ def bench_perm_cache() -> dict:
     local = make_hwpid_local([5])
     batch = 8192
     starts = np.asarray(ht.starts[:n], np.int32)
-    # 64-page hot working sets: what a tenant's gather traffic against a few
-    # shared tensors looks like (the paper's cache design point).  "fits" =
-    # conflict-free in the 256 direct-mapped sets (the 16 KiB cache holds the
-    # working set -> steady state is all-hit and skips search + refill);
-    # "conflicts" = random pages, ~12% set-conflict thrash.
+    # 64-page hot working sets (a tenant's gather traffic against a few
+    # shared tensors — the paper's cache design point).  "fits" =
+    # conflict-free in every organization; "conflicts" = the adversarial
+    # set-aliasing working set (see `_aliasing_pages`): still 64 pages in a
+    # 256-entry cache, but distributed to defeat direct mapping.
     sets_seen, fit = set(), []
     for p in starts[rng.permutation(n)]:
         if int(p) & 255 not in sets_seen:
@@ -191,32 +304,48 @@ def bench_perm_cache() -> dict:
             break
     traces = {
         "fits": np.asarray(fit, np.int32),
-        "conflicts": starts[rng.choice(n, 64, replace=False)],
+        "conflicts": _aliasing_pages(starts),
     }
     out = {"bench": "perm_cache", "n_entries": n,
-           "note": "16 KiB direct-mapped cache (256 sets); hit lanes skip "
-                   "the binary search, all-hit batches also skip refill "
-                   "(paper Fig. 13 analogue)"}
+           "note": "16 KiB permission cache, 4-way x 64 sets with tree-PLRU "
+                   "(direct_mapped = same budget as 256 x 1 for "
+                   "comparison); hit lanes skip the binary search, all-hit "
+                   "batches also skip refill (paper Fig. 13 analogue). "
+                   "'conflicts' = 16 groups of 4 pages aliasing one "
+                   "direct-mapped set each"}
     for name, hot in traces.items():
-        pages = hot[rng.integers(0, 64, batch)].astype(np.int32)
+        pages = hot[rng.integers(0, len(hot), batch)].astype(np.int32)
         ext = pack_ext_addr(np.full(batch, 5, np.int32), pages)
         wr = jnp.zeros(batch, bool)
-        us_plain = _time(lambda e=ext: check_access_jit(table, local, e, wr))
-        cache = make_perm_cache()
-        _, cache = cached_check_access_jit(table, local, ext, wr, cache)
-        us_cached = _time(
-            lambda e=ext: cached_check_access_jit(table, local, e, wr,
-                                                  cache))
-        res, cache2 = cached_check_access_jit(table, local, ext, wr, cache)
-        out[name] = {
-            "uncached_us": round(us_plain, 1),
-            "cached_hot_us": round(us_cached, 1),
-            "speedup_x": round(us_plain / us_cached, 2),
-            "steady_hit_rate": round(
-                float(cache2.hits - cache.hits) / batch, 4),
-            "probes_per_access_cached": round(
-                float(np.asarray(res.probes).mean()), 2),
-        }
+        warm = {}
+        for label, ways in (("4way", 4), ("direct_mapped", 1)):
+            cache = make_perm_cache(ways=ways)
+            _, warm[label] = cached_check_access_jit(table, local, ext, wr,
+                                                     cache)
+        reps = _time_each({
+            "uncached": lambda: check_access_jit(table, local, ext, wr),
+            "4way": lambda: cached_check_access_jit(
+                table, local, ext, wr, warm["4way"]),
+            "direct_mapped": lambda: cached_check_access_jit(
+                table, local, ext, wr, warm["direct_mapped"])})
+        times = _med(reps)
+        rec = {"uncached_us": round(times["uncached"], 1)}
+        for label in ("4way", "direct_mapped"):
+            res, cache2 = cached_check_access_jit(table, local, ext, wr,
+                                                  warm[label])
+            sub = {
+                "cached_hot_us": round(times[label], 1),
+                "speedup_x": round(_ratio(reps, "uncached", label), 2),
+                "steady_hit_rate": round(
+                    float(cache2.hits - warm[label].hits) / batch, 4),
+                "probes_per_access_cached": round(
+                    float(np.asarray(res.probes).mean()), 2),
+            }
+            if label == "4way":
+                rec.update(sub)
+            else:
+                rec[label] = sub
+        out[name] = rec
     out["probes_per_access_uncached"] = round(
         float(np.asarray(check_access_jit(
             table, local, ext, wr).probes).mean()), 2)
@@ -285,7 +414,7 @@ def bench_churn() -> dict:
                             pack_ext_addr)
     from repro.core.checker import cached_check_access_jit, make_perm_cache
     n_tenants = 4 if SMOKE else 8
-    pages_per = 24      # 8 tenants x 24 pages fit the 256 direct-mapped
+    pages_per = 24      # 8 tenants x 24 pages fit the 64-set x 4-way cache
     batch = 256 if SMOKE else 1024
     steps = 24 if SMOKE else 120
     churn_every = 6 if SMOKE else 15
@@ -301,8 +430,9 @@ def bench_churn() -> dict:
         tenants = []
         for i in range(n_tenants):
             pid = h0.get_next_pid()
-            # spaced so each tenant's pages land in its own cache sets
-            # (page & 255): conflict-free like a real per-tenant KV block
+            # spaced so concurrent tenants alias each set (page & 63) at
+            # most 4 deep — held whole by the 4 ways, like per-tenant KV
+            # blocks sharing the cache
             start = 1 + i * 1024 + (i * 32) % 256
             fm.propose(Proposal(0, pid, 1, start, pages_per, PERM_RW))
             pages = start + rng.integers(0, pages_per, batch)
@@ -409,15 +539,25 @@ def main() -> None:
     pc = results.get("permcheck", {}).get("rows", {})
     for key, row in pc.items():
         if isinstance(row, dict) and "hot" in row:
-            print(f"  permcheck {key}: hot {row['hot']['speedup_x']}x, "
-                  f"uniform {row['uniform']['speedup_x']}x vs full scan")
+            modes = "/".join(row[t]["chosen_mode"]
+                             for t in ("hot", "uniform", "conflict"))
+            print(f"  permcheck {key}: adaptive vs flat "
+                  f"hot {row['hot']['speedup_x']}x, "
+                  f"uniform {row['uniform']['speedup_x']}x, "
+                  f"conflict {row['conflict']['speedup_x']}x "
+                  f"(chosen {modes})")
     fe = results.get("fused_egress")
     if fe:
-        print(f"  fused egress: {fe['speedup_x']}x vs two launches")
-    pc2 = results.get("perm_cache", {}).get("fits")
-    if pc2:
-        print(f"  perm cache (working set fits): {pc2['speedup_x']}x, "
-              f"hit rate {pc2['steady_hit_rate']}")
+        print(f"  fused egress: {fe['speedup_x']}x vs two launches "
+              f"({fe['chosen_mode']}, {fe['super_blocks']} super-blocks)")
+    pcache = results.get("perm_cache", {})
+    for tr in ("fits", "conflicts"):
+        r = pcache.get(tr)
+        if r:
+            dm = r.get("direct_mapped", {})
+            print(f"  perm cache ({tr}): 4-way {r['speedup_x']}x "
+                  f"hit {r['steady_hit_rate']}; direct-mapped "
+                  f"{dm.get('speedup_x')}x hit {dm.get('steady_hit_rate')}")
     ch = results.get("churn")
     if ch:
         print(f"  churn: {ch['churn_over_static_x']}x vs static tenants "

@@ -266,13 +266,24 @@ def fig13_cache_sweep() -> dict:
             cpi[kernel][cb] = round(res.cpi / base.cpi, 4)
     hit_2k = 1 - float(np.mean([miss[k][2048] for k in FIG7_KERNELS]))
     speedup_2k = 1 / float(np.mean([cpi[k][2048] for k in FIG7_KERNELS]))
-    # marginal overhead vs cxl at 16 KiB
+    # marginal overhead vs cxl at 16 KiB, plus the organization column:
+    # the same 16 KiB budget as direct-mapped (256 x 1) vs 4-way (64 x 4)
+    # set-associative LRU vs the fully-associative upper bound.
     overhead_16k = []
+    assoc = {"direct_mapped": {}, "four_way": {}, "full": {}}
     for kernel in FIG7_KERNELS:
         tr = _trace(kernel)
         res, _ = run_pair(tr, n_entries=pages, cache_bytes=16384,
                           n_hosts=1, kernel=kernel, sdm_pages=pages)
         overhead_16k.append(res.cpi_norm - 1)
+        assoc["full"][kernel] = round(res.miss_ratio, 5)
+        for label, ways in (("direct_mapped", 1), ("four_way", 4)):
+            r, _ = run_pair(tr, n_entries=pages, cache_bytes=16384,
+                            n_hosts=1, kernel=kernel, sdm_pages=pages,
+                            cache_ways=ways)
+            assoc[label][kernel] = round(r.miss_ratio, 5)
+    dm = float(np.mean(list(assoc["direct_mapped"].values())))
+    fw = float(np.mean(list(assoc["four_way"].values())))
     return {
         "figure": "13",
         "description": "permission cache: miss ratio + CPI vs size "
@@ -283,6 +294,12 @@ def fig13_cache_sweep() -> dict:
         "speedup_2KiB_x": round(speedup_2k, 3),
         "overhead_16KiB_vs_cxl_pct": round(
             float(np.mean(overhead_16k)) * 100, 2),
+        "miss_ratio_16KiB_by_assoc": assoc,
+        "four_way_vs_direct_mapped": {
+            "direct_mapped_miss": round(dm, 5),
+            "four_way_miss": round(fw, 5),
+            "miss_reduction_pct": round((dm - fw) / max(dm, 1e-12) * 100, 2),
+        },
         "paper_claim": {"hit_2KiB": 0.999, "speedup_2KiB_x": 2.3,
                         "overhead_16KiB_pct": 3.3,
                         "elbow": "most gain by 2-4 KiB"},

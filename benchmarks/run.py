@@ -27,9 +27,12 @@ def _headline(name: str, rec: dict) -> str:
             return (f"wc tc={rec['cpi_norm_wc']['tc'][1]}x "
                     f"pr={rec['cpi_norm_wc']['pr'][1]}x")
         if name == "fig13_cache_sweep":
+            fv = rec["four_way_vs_direct_mapped"]
             return (f"2KiB hit={rec['hit_rate_2KiB']:.4f} "
                     f"speedup={rec['speedup_2KiB_x']}x "
-                    f"16KiB overhead={rec['overhead_16KiB_vs_cxl_pct']}%")
+                    f"16KiB overhead={rec['overhead_16KiB_vs_cxl_pct']}% "
+                    f"4way miss={fv['four_way_miss']:.4f} vs "
+                    f"dm={fv['direct_mapped_miss']:.4f}")
         if name == "fig14_prior_works":
             return (f"deact +{rec['deact_vs_sc1e_pct']}% vs sc-1e; "
                     f"mondrian {rec['mondrian_vs_sc_x']}x sc")

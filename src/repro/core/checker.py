@@ -50,30 +50,43 @@ def binary_search(starts: jax.Array, n: jax.Array, pages: jax.Array):
     (-1 if none); probes = number of table entries touched, matching the
     paper's 'binary-search occupancy' metric (Fig. 9).  Runs a fixed
     ceil(log2(cap))+1 iteration loop (jit-friendly) while counting only the
-    iterations a sequential searcher would have executed.
+    iterations a sequential searcher would have executed.  Tables with at
+    most one live entry short-circuit to a single compare — the common
+    one-grant tenant pays no loop at all.
     """
     cap = starts.shape[0]
     steps = int(np.ceil(np.log2(max(cap, 2)))) + 1
     pages = jnp.asarray(pages, jnp.int32)
-    lo = jnp.zeros_like(pages)
-    hi = jnp.broadcast_to(jnp.asarray(n, jnp.int32) - 1, pages.shape)
-    idx = jnp.full_like(pages, -1)
-    probes = jnp.zeros_like(pages)
+    n = jnp.asarray(n, jnp.int32)
 
-    def body(_, carry):
-        lo, hi, idx, probes = carry
-        active = lo <= hi
-        mid = (lo + hi) // 2
-        s = starts[jnp.clip(mid, 0, cap - 1)]
-        probes = probes + active.astype(jnp.int32)
-        go_right = s <= pages
-        idx = jnp.where(active & go_right, mid, idx)
-        lo = jnp.where(active & go_right, mid + 1, lo)
-        hi = jnp.where(active & ~go_right, mid - 1, hi)
-        return lo, hi, idx, probes
+    def single(_):
+        has = (n >= 1) & (starts[0] <= pages)
+        return (jnp.where(has, 0, -1).astype(pages.dtype),
+                jnp.broadcast_to((n >= 1).astype(jnp.int32), pages.shape))
 
-    lo, hi, idx, probes = jax.lax.fori_loop(0, steps, body, (lo, hi, idx, probes))
-    return idx, probes
+    def full(_):
+        lo = jnp.zeros_like(pages)
+        hi = jnp.broadcast_to(n - 1, pages.shape)
+        idx = jnp.full_like(pages, -1)
+        probes = jnp.zeros_like(pages)
+
+        def body(_, carry):
+            lo, hi, idx, probes = carry
+            active = lo <= hi
+            mid = (lo + hi) // 2
+            s = starts[jnp.clip(mid, 0, cap - 1)]
+            probes = probes + active.astype(jnp.int32)
+            go_right = s <= pages
+            idx = jnp.where(active & go_right, mid, idx)
+            lo = jnp.where(active & go_right, mid + 1, lo)
+            hi = jnp.where(active & ~go_right, mid - 1, hi)
+            return lo, hi, idx, probes
+
+        _, _, idx, probes = jax.lax.fori_loop(0, steps, body,
+                                              (lo, hi, idx, probes))
+        return idx, probes
+
+    return jax.lax.cond(n <= 1, single, full, None)
 
 
 def check_access(
@@ -102,29 +115,37 @@ def make_hwpid_local(hwpids) -> jax.Array:
 # Vectorized permission cache (paper §4.2.3: 16 KiB cache in the checker)
 # ---------------------------------------------------------------------------
 # The paper's checker hides table-walk latency behind a small SRAM cache of
-# recently matched entries.  `PermCache` is the batched jnp analogue: a
-# direct-mapped map page -> matched entry index, held as plain arrays so the
-# whole probe/refill runs inside jit.  The cache is EPOCH-FENCED against the
-# table it mirrors (paper §4.1.3/§7.1.7): when `cache.epoch == table.epoch`
-# the FM's BISnp protocol guarantees every surviving mapping is current, so
-# probe hits skip live-table revalidation entirely and an all-hit batch does
-# no table reads in the probe stage at all.  When the epochs diverge (an
-# unwired cache, or a missed back-invalidate) the probe falls back to
-# revalidating each hit against the live table — a stale mapping then fails
-# validation and degrades to a miss, never to a stale grant.  When EVERY lane
-# of a batch hits, the log2(N) binary search is skipped entirely via
-# `lax.cond` — the vectorized fast path for the repeated-page traffic the
-# paper's cache exploits.  The exact fully-associative LRU model lives in
-# `repro.core.cache.LruCache` / memsim; this cache trades associativity for a
-# branch-free vector probe.
+# recently matched entries.  `PermCache` is the batched jnp analogue: an
+# N-way set-associative map page -> matched entry index (default 4-way x 64
+# sets within the same 16 KiB budget), held as plain arrays so the whole
+# probe/refill runs inside jit.  Replacement is tree-PLRU — one (ways-1)-bit
+# binary tree per set, victim found by following the bits, every access
+# repointing its path away from the touched way — the standard SRAM policy
+# the Simu3-style simulators model, and cheap enough to update on the all-hit
+# fast path.  The cache is EPOCH-FENCED against the table it mirrors (paper
+# §4.1.3/§7.1.7): when `cache.epoch == table.epoch` the FM's BISnp protocol
+# guarantees every surviving mapping is current, so probe hits skip
+# live-table revalidation entirely and an all-hit batch does no table reads
+# in the probe stage at all.  When the epochs diverge (an unwired cache, or
+# a missed back-invalidate) the probe falls back to revalidating each hit
+# against the live table — a stale mapping then fails validation and
+# degrades to a miss, never to a stale grant.  When EVERY lane of a batch
+# hits, the log2(N) binary search is skipped entirely via `lax.cond` — the
+# vectorized fast path for the repeated-page traffic the paper's cache
+# exploits.  The exact fully-associative LRU model lives in
+# `repro.core.cache.LruCache` / memsim; this cache trades full associativity
+# for a branch-free vector probe, and ways=1 degenerates to the old
+# direct-mapped layout (kept for the Fig. 13 comparison column).
 
 PERM_CACHE_BYTES = 16 * 1024    # paper default: 16 KiB
 CACHE_ENTRY_BYTES = 64          # one 64 B table entry per cache slot
+PERM_CACHE_WAYS = 4             # default associativity (4-way x 64 sets)
 
 
 class PermCache(NamedTuple):
-    tag: jax.Array      # i32[n_sets] cached page address (-1 = invalid)
-    entry: jax.Array    # i32[n_sets] table entry index the page matched
+    tag: jax.Array      # i32[n_sets, n_ways] cached page address (-1 invalid)
+    entry: jax.Array    # i32[n_sets, n_ways] table entry index matched
+    plru: jax.Array     # u32[n_sets] tree-PLRU bits (low n_ways-1 bits used)
     hits: jax.Array     # i32[] cumulative probe hits
     misses: jax.Array   # i32[] cumulative probe misses
     epoch: jax.Array    # i32[] table epoch the surviving mappings are valid at
@@ -134,8 +155,12 @@ class PermCache(NamedTuple):
         return self.tag.shape[0]
 
     @property
+    def n_ways(self) -> int:
+        return self.tag.shape[1]
+
+    @property
     def capacity_bytes(self) -> int:
-        return self.n_sets * CACHE_ENTRY_BYTES
+        return self.n_sets * self.n_ways * CACHE_ENTRY_BYTES
 
     @property
     def hit_rate(self) -> float:
@@ -143,20 +168,60 @@ class PermCache(NamedTuple):
         return int(self.hits) / t if t else 0.0
 
 
+def plru_victim(bits, n_ways: int):
+    """Tree-PLRU victim way for each set's bit word (vectorized).
+
+    The replacement tree is a perfect binary tree stored breadth-first in
+    the low ``n_ways - 1`` bits: node 0 is the root, node ``i``'s children
+    are ``2i+1`` / ``2i+2``, and bit value = the direction the next victim
+    walk takes (0 left, 1 right).  Leaves map to ways in order.
+    """
+    bits = jnp.asarray(bits, jnp.uint32)
+    node = jnp.zeros(bits.shape, jnp.int32)
+    for _ in range(max(n_ways.bit_length() - 1, 0)):
+        d = ((bits >> node.astype(jnp.uint32)) & 1).astype(jnp.int32)
+        node = 2 * node + 1 + d
+    return node - (n_ways - 1)
+
+
+def plru_touch(bits, way, n_ways: int):
+    """Repoint the PLRU tree away from ``way`` (MRU protection): every node
+    on the accessed way's root-to-leaf path is set to the *opposite*
+    direction, so the victim walk avoids the most recent access.  Vectorized
+    over matching ``bits``/``way`` shapes."""
+    bits = jnp.asarray(bits, jnp.uint32)
+    way = jnp.asarray(way, jnp.int32)
+    levels = max(n_ways.bit_length() - 1, 0)
+    node = jnp.zeros(way.shape, jnp.int32)
+    for lvl in range(levels):
+        d = (way >> (levels - 1 - lvl)) & 1
+        mask = jnp.uint32(1) << node.astype(jnp.uint32)
+        bits = jnp.where(d == 1, bits & ~mask, bits | mask)
+        node = 2 * node + 1 + d
+    return bits
+
+
 def make_perm_cache(capacity_bytes: int = PERM_CACHE_BYTES,
-                    *, epoch: int = 0) -> PermCache:
-    """Fresh (all-invalid) cache.  Pass ``epoch=table.epoch`` (or wire
-    `invalidate_perm_cache` to the FM's BISnp broadcasts) to enable the
-    fenced fast path; a cache left at an older epoch still returns correct
-    verdicts via per-hit revalidation."""
-    if capacity_bytes % CACHE_ENTRY_BYTES:
-        raise ValueError("capacity must be a multiple of 64 B entries")
-    n_sets = capacity_bytes // CACHE_ENTRY_BYTES
+                    *, epoch: int = 0,
+                    ways: int = PERM_CACHE_WAYS) -> PermCache:
+    """Fresh (all-invalid) set-associative cache.  The 16 KiB default holds
+    256 entries as 64 sets x 4 ways; ``ways=1`` gives the direct-mapped
+    layout.  Pass ``epoch=table.epoch`` (or wire `invalidate_perm_cache` to
+    the FM's BISnp broadcasts) to enable the fenced fast path; a cache left
+    at an older epoch still returns correct verdicts via per-hit
+    revalidation."""
+    if ways < 1 or ways & (ways - 1):
+        raise ValueError("perm cache ways must be a power of two")
+    if capacity_bytes % (CACHE_ENTRY_BYTES * ways):
+        raise ValueError(
+            "capacity must be a multiple of 64 B entries x ways")
+    n_sets = capacity_bytes // (CACHE_ENTRY_BYTES * ways)
     if n_sets & (n_sets - 1):
         raise ValueError("perm cache set count must be a power of two")
     return PermCache(
-        tag=jnp.full((n_sets,), -1, jnp.int32),
-        entry=jnp.full((n_sets,), -1, jnp.int32),
+        tag=jnp.full((n_sets, ways), -1, jnp.int32),
+        entry=jnp.full((n_sets, ways), -1, jnp.int32),
+        plru=jnp.zeros((n_sets,), jnp.uint32),
         hits=jnp.zeros((), jnp.int32),
         misses=jnp.zeros((), jnp.int32),
         epoch=jnp.asarray(epoch, jnp.int32),
@@ -245,7 +310,7 @@ def cached_check_access(
     is_write: jax.Array,
     cache: PermCache,
 ) -> tuple[CheckResult, PermCache]:
-    """`check_access` with the direct-mapped permission-cache fast path.
+    """`check_access` with the set-associative permission-cache fast path.
 
     Semantically identical to `check_access` (same CheckResult fields except
     `probes`, which is 0 on cache-hit lanes — the search was skipped);
@@ -255,17 +320,20 @@ def cached_check_access(
     """
     hwpid, page = unpack_ext_addr(ext_addrs)
     is_write = jnp.asarray(is_write, bool)
-    n_sets = cache.n_sets
+    n_sets, n_ways = cache.n_sets, cache.n_ways
 
-    # probe: direct-mapped on the low page bits.  Inside the epoch fence the
-    # BISnp protocol already guarantees freshness, so the probe is just a tag
-    # compare; outside it every hit is revalidated against the live table (a
-    # stale mapping then fails validation and degrades to a miss, never to a
-    # wrong verdict).
+    # probe: set-indexed on the low page bits, all ways compared at once.
+    # Inside the epoch fence the BISnp protocol already guarantees
+    # freshness, so the probe is just a tag compare; outside it every hit is
+    # revalidated against the live table (a stale mapping then fails
+    # validation and degrades to a miss, never to a wrong verdict).
     set_idx = page & (n_sets - 1)
-    ctag = cache.tag[set_idx]
-    cent = cache.entry[set_idx]
-    probe_ok = (ctag == page) & (cent >= 0)
+    ctags = cache.tag[set_idx]                    # (B, ways)
+    cents = cache.entry[set_idx]                  # (B, ways)
+    way_match = (ctags == page[..., None]) & (cents >= 0)
+    probe_ok = jnp.any(way_match, axis=-1)
+    hit_way = jnp.argmax(way_match, axis=-1).astype(jnp.int32)
+    cent = jnp.take_along_axis(cents, hit_way[..., None], axis=-1)[..., 0]
     safe_cent = jnp.clip(cent, 0, table.capacity - 1)
     fenced = cache.epoch == jnp.asarray(table.epoch, jnp.int32)
 
@@ -293,23 +361,70 @@ def cached_check_access(
 
     result = _finalize(table, hwpid_local, hwpid, page, is_write, idx, probes)
 
-    # refill: install lanes that resolved to a live entry (duplicate sets in
-    # one batch: last lane wins, as in any single-ported SRAM fill).  An
-    # all-hit batch changes nothing, so the scatter is cond-skipped too.
-    def refill(_):
-        found = result.entry_idx >= 0
-        upd_set = jnp.where(found, set_idx, n_sets)  # n_sets = drop slot
-        tag1 = jnp.concatenate([cache.tag, jnp.full((1,), -1, jnp.int32)])
-        ent1 = jnp.concatenate([cache.entry, jnp.full((1,), -1, jnp.int32)])
-        return (tag1.at[upd_set].set(page)[:n_sets],
-                ent1.at[upd_set].set(result.entry_idx)[:n_sets])
+    bits = cache.plru[set_idx]                    # (B,) gathered PLRU words
 
-    new_tag, new_ent = jax.lax.cond(
-        jnp.all(hit), lambda _: (cache.tag, cache.entry), refill, None)
+    def scatter_plru(upd, way_used):
+        """Repoint touched sets' trees away from the way each lane used
+        (duplicate sets in one batch: last lane wins, like any
+        single-ported SRAM update; n_sets is the drop slot)."""
+        new_bits = plru_touch(bits, way_used, n_ways)
+        upd_set = jnp.where(upd, set_idx, n_sets)
+        plru1 = jnp.concatenate([cache.plru, jnp.zeros((1,), jnp.uint32)])
+        return plru1.at[upd_set].set(new_bits)[:n_sets]
+
+    # all-hit fast path: tags/entries unchanged, and the PLRU scatter is
+    # skipped too — replacement state only matters when a refill has to
+    # pick a victim, and an all-hit batch performs none.  Any batch that
+    # DOES miss refreshes recency for its hit lanes as well (the refill
+    # branch touches hit and filled ways alike), so the victim walk still
+    # sees current recency whenever it actually runs.  Skipping the
+    # scatter here is what keeps the steady-state hot path at probe +
+    # verdict cost only.
+    def allhit_update(_):
+        return cache.tag, cache.entry, cache.plru
+
+    # refill: install missed lanes that resolved to a live entry, filling
+    # an invalid way first and the tree-PLRU victim once the set is full.
+    # Distinct pages aliasing into one set within the SAME batch are fanned
+    # out across consecutive ways (a sequential SRAM would install each in
+    # turn; without the rank they would all target the same way and only
+    # the last would survive the scatter).
+    def refill(_):
+        inv = cents < 0
+        inv_way = jnp.argmax(inv, axis=-1).astype(jnp.int32)
+        victim = plru_victim(bits, n_ways)
+        base_way = jnp.where(jnp.any(inv, axis=-1), inv_way, victim)
+        found = ~hit & (result.entry_idx >= 0)
+        # rank of each lane's page among the distinct filling pages of its
+        # set: sort on (set, page), count page changes within set runs
+        skey = jnp.where(found, (set_idx << 24) | page,
+                         jnp.int32(np.iinfo(np.int32).max))
+        order = jnp.argsort(skey)
+        sk = skey[order]
+        one = jnp.ones((1,), bool)
+        fresh = jnp.concatenate([one, sk[1:] != sk[:-1]])
+        set_run = jnp.concatenate([one, (sk[1:] >> 24) != (sk[:-1] >> 24)])
+        distinct = jnp.cumsum(fresh.astype(jnp.int32)) - 1
+        run_base = jax.lax.cummax(jnp.where(set_run, distinct, -1))
+        rank = jnp.zeros_like(distinct).at[order].set(distinct - run_base)
+        fill_way = (base_way + rank) % n_ways
+        way_used = jnp.where(hit, hit_way, fill_way)
+        upd_set = jnp.where(found, set_idx, n_sets)  # n_sets = drop slot
+        tag1 = jnp.concatenate(
+            [cache.tag, jnp.full((1, n_ways), -1, jnp.int32)])
+        ent1 = jnp.concatenate(
+            [cache.entry, jnp.full((1, n_ways), -1, jnp.int32)])
+        return (tag1.at[upd_set, fill_way].set(page)[:n_sets],
+                ent1.at[upd_set, fill_way].set(result.entry_idx)[:n_sets],
+                scatter_plru(hit | found, way_used))
+
+    new_tag, new_ent, new_plru = jax.lax.cond(
+        jnp.all(hit), allhit_update, refill, None)
     n_hits = jnp.sum(hit).astype(jnp.int32)
     new_cache = PermCache(
         tag=new_tag,
         entry=new_ent,
+        plru=new_plru,
         hits=cache.hits + n_hits,
         misses=cache.misses + (jnp.int32(page.size) - n_hits),
         # refills never advance the fence: only BISnp events do.  Entries

@@ -104,6 +104,25 @@ def tile_summary(starts, ends, *, tile: int = SUMMARY_TILE,
     return tile_min, tile_max
 
 
+def summary_candidate_tiles(pages, tile_min, tile_max, *, block: int):
+    """Per-kernel-step candidate-tile counts from an existing tile summary.
+
+    ``pages`` (a flat i32 batch whose length is a multiple of ``block``) is
+    cut into ``block``-lane kernel steps; for each step this counts how many
+    summary tiles at least one lane's page falls into — exactly the tiles
+    the hierarchical search would evaluate for that step.  The count is the
+    selectivity estimate the adaptive flat/hier kernel selector runs on: it
+    reuses the summary the hier kernel already needs, costs
+    O(B x n_tiles) comparisons (a ~``2/tile`` sliver of one flat-scan
+    pass), and needs no table walk.  Returns i32[n_steps].
+    """
+    pages = jnp.asarray(pages, jnp.int32)
+    n_tiles = tile_min.shape[0]
+    cand = (pages[:, None] >= tile_min) & (pages[:, None] < tile_max)
+    per_step = cand.reshape(-1, block, n_tiles).any(axis=1)
+    return per_step.sum(axis=-1).astype(jnp.int32)
+
+
 def make_table(capacity: int) -> PermissionTable:
     return PermissionTable(
         starts=jnp.full((capacity,), EMPTY_START, jnp.int32),

@@ -3,21 +3,27 @@
 The single-host fused kernel (`checked_memcrypt_view_pallas`) launches once
 per host per step — at the paper's 255-host deployment that is 255 dispatches
 of identical structure.  This kernel batches the whole fabric step into ONE
-``pallas_call`` over a 2-D grid ``(host, block)``:
+``pallas_call`` over a 2-D grid ``(host, super_block)``:
 
   * each host's resident table shard (see `repro.core.fabric.HostRuntime`)
     is one row of the stacked ``[H, N]`` entry arrays, so grid step
     ``(h, j)`` loads host ``h``'s shard into VMEM and evaluates the same
-    two-level hierarchical search as the single-host kernel (`_hier_search`
-    is shared code);
+    adaptive cover search as the single-host kernel (`_cover_search` is
+    shared code);
   * the tenant HWPID is a *dynamic* per-host operand (``hwpids[h]``) rather
     than the single-host kernel's static argument — one compiled kernel
     serves every host in the fleet, and admitting a tenant with a fresh
     HWPID does not recompile;
-  * the keystream counter is the flat word position ``(h * n_blocks + j) *
-    BLOCK + lane``, exactly the single-host kernel at
-    ``base_word = h * padded_B`` — pinned by the differential test in
-    tests/test_fabric.py.
+  * flat-vs-hier selection is *per host*: the wrapper scores every host's
+    batch against that host's shard summary (`summary_candidate_tiles`
+    vectorized over rows) and ships a ``use_hier i32[H]`` operand — a host
+    serving uniform traffic runs the flat scan while its neighbor with a
+    hot working set keeps the two-level win, in the same launch;
+  * each grid step streams SUPER_BLOCKS x BLOCK words (double-buffered
+    across steps on TPU via ``dimension_semantics``), and the keystream
+    counter stays the flat word position ``h * padded_B + j * sb + lane`` —
+    exactly the single-host kernel at ``base_word = h * padded_B`` — pinned
+    by the differential test in tests/test_fabric.py.
 
 Per-row semantics match ``kernels.ref.checked_memcrypt`` for that row's
 shard/hwpid bit-exactly: denied lanes read zero and carry a FAULT_* code.
@@ -29,6 +35,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.checker import (
     FAULT_NO_ABITS,
@@ -40,43 +47,63 @@ from repro.core.checker import (
 from repro.core.crypto import arx_mac32
 from repro.core.table import HWPID_SHIFT, PAGE_MASK
 from repro.kernels import bucket_pad, resolve_interpret
-from repro.kernels.memcrypt import BLOCK, _keystream
-from repro.kernels.permcheck import ENTRY_TILE, _hier_search
+from repro.kernels.memcrypt import BLOCK, SUPER_BLOCKS, _keystream
+from repro.kernels.permcheck import (ENTRY_TILE, HIER_DENSITY_DEN,
+                                     HIER_DENSITY_NUM, _cover_search,
+                                     grant_sizes)
 
 
-def _fabric_egress_kernel(data_ref, addr_ref, hwpid_ref, starts_ref,
-                          ends_ref, permbits_ref, tmin_ref, tmax_ref,
-                          out_ref, fault_ref, *, need: int, key0: int,
-                          key1: int, n_entries: int, n_blocks: int):
+def _fabric_egress_kernel(data_ref, addr_ref, hwpid_ref, sel_ref, starts_ref,
+                          sizes_ref, sizes_ok_ref, tmin_ref, tmax_ref,
+                          out_ref, fault_ref, *, key0: int,
+                          key1: int, n_entries: int, n_steps: int,
+                          rows: int):
     h = pl.program_id(0)
     j = pl.program_id(1)
-    d = data_ref[...].reshape(8, 128)
-    ext = addr_ref[...].astype(jnp.int32).reshape(8, 128)
+    d = data_ref[...].reshape(rows, 128)
+    ext = addr_ref[...].astype(jnp.int32).reshape(rows, 128)
     hwpid = hwpid_ref[h]                       # dynamic per-host tenant tag
     tag = ext >> HWPID_SHIFT
     page = ext & PAGE_MASK
     tag_ok = tag == hwpid
 
-    any_hit, idx = _hier_search(
+    any_ok, covered = _cover_search(
         page,
-        starts_ref[...].reshape(-1), ends_ref[...].reshape(-1),
-        permbits_ref[...].reshape(-1),
+        starts_ref[...].reshape(-1), sizes_ref[...].reshape(-1),
+        sizes_ok_ref[...].reshape(-1),
         tmin_ref[...].reshape(-1), tmax_ref[...].reshape(-1),
-        n_entries // ENTRY_TILE, jnp.uint32(need))
+        n_entries // ENTRY_TILE,
+        sel_ref[h] > 0)                        # per-host adaptive selection
 
-    allowed = tag_ok & any_hit
-    covered = idx >= 0
+    allowed = tag_ok & any_ok
     fault = jnp.where(
         allowed, FAULT_NONE,
         jnp.where(tag <= 0, FAULT_NO_ABITS,
                   jnp.where(~tag_ok, FAULT_NOT_LOCAL,
                             jnp.where(~covered, FAULT_NO_ENTRY, FAULT_PERM))))
 
-    line, word = _keystream(h * n_blocks + j, 0)
+    line, word = _keystream(h * n_steps + j, 0, rows)
     ks0, _ = arx_mac32(jnp.uint32(key0), jnp.uint32(key1), line, word)
     out = jnp.where(allowed, d ^ ks0, jnp.uint32(0))
     out_ref[...] = out.reshape(out_ref.shape)
     fault_ref[...] = fault.astype(jnp.int32).reshape(fault_ref.shape)
+
+
+def _per_host_use_hier(pages, tmin, tmax, *, block: int):
+    """Vectorized per-host selector: ``use_hier[h]`` iff host h's batch
+    keeps its candidate-tile density below HIER_DENSITY of that host's
+    shard tiles (the row-wise form of `permcheck.hier_profitable`).
+    ``pages`` i32[H, Bp] (padded), summaries i32[H, T]."""
+    n_tiles = tmin.shape[1]
+    if n_tiles <= 1:
+        return jnp.zeros((pages.shape[0],), jnp.int32)
+    cand = (pages[:, :, None] >= tmin[:, None, :]) & \
+        (pages[:, :, None] < tmax[:, None, :])          # (H, Bp, T)
+    n_steps = pages.shape[1] // block
+    needed = cand.reshape(pages.shape[0], n_steps, block, n_tiles) \
+        .any(axis=2).sum(axis=(1, 2))                   # i32[H]
+    use = HIER_DENSITY_DEN * needed <= HIER_DENSITY_NUM * n_steps * n_tiles
+    return use.astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("need", "key0", "key1",
@@ -87,7 +114,9 @@ def _fabric_egress_impl(data, ext, hwpids, starts, ends, permbits, tmin,
     interpret = resolve_interpret(interpret)
     h, b = data.shape
     bp = bucket_pad(b, BLOCK)
-    n_blocks = bp // BLOCK
+    sb = min(SUPER_BLOCKS, bp // BLOCK) * BLOCK   # both are powers of two
+    n_steps = bp // sb
+    rows = sb // 128
     buf = jnp.zeros((h, bp), jnp.uint32).at[:, :b].set(
         jnp.asarray(data, jnp.uint32))
     # -1 padding: tag 0 -> denied (FAULT_NO_ABITS), zero output word
@@ -95,16 +124,19 @@ def _fabric_egress_impl(data, ext, hwpids, starts, ends, permbits, tmin,
         jnp.asarray(ext, jnp.int32))
     np_ = starts.shape[1]
     n_tiles = tmin.shape[1]
+    sizes, sizes_ok = grant_sizes(starts, ends, permbits, jnp.uint32(need))
+    sel = _per_host_use_hier(extp & PAGE_MASK, tmin, tmax, block=sb)
 
     kernel = functools.partial(
-        _fabric_egress_kernel, need=need, key0=int(key0), key1=int(key1),
-        n_entries=np_, n_blocks=n_blocks)
+        _fabric_egress_kernel, key0=int(key0), key1=int(key1),
+        n_entries=np_, n_steps=n_steps, rows=rows)
     out, fault = pl.pallas_call(
         kernel,
-        grid=(h, n_blocks),
+        grid=(h, n_steps),
         in_specs=[
-            pl.BlockSpec((1, BLOCK), lambda i, j: (i, j)),
-            pl.BlockSpec((1, BLOCK), lambda i, j: (i, j)),
+            pl.BlockSpec((1, sb), lambda i, j: (i, j)),
+            pl.BlockSpec((1, sb), lambda i, j: (i, j)),
+            pl.BlockSpec((h,), lambda i, j: (0,)),
             pl.BlockSpec((h,), lambda i, j: (0,)),
             pl.BlockSpec((1, np_), lambda i, j: (i, 0)),
             pl.BlockSpec((1, np_), lambda i, j: (i, 0)),
@@ -113,16 +145,18 @@ def _fabric_egress_impl(data, ext, hwpids, starts, ends, permbits, tmin,
             pl.BlockSpec((1, n_tiles), lambda i, j: (i, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, BLOCK), lambda i, j: (i, j)),
-            pl.BlockSpec((1, BLOCK), lambda i, j: (i, j)),
+            pl.BlockSpec((1, sb), lambda i, j: (i, j)),
+            pl.BlockSpec((1, sb), lambda i, j: (i, j)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((h, bp), jnp.uint32),
             jax.ShapeDtypeStruct((h, bp), jnp.int32),
         ],
         interpret=interpret,
-    )(buf, extp, jnp.asarray(hwpids, jnp.int32), starts, ends, permbits,
-      tmin, tmax)
+        **({} if interpret else {"compiler_params": pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel"))}),
+    )(buf, extp, jnp.asarray(hwpids, jnp.int32), sel, starts, sizes,
+      sizes_ok, tmin, tmax)
     return out[:, :b], fault[:, :b]
 
 
@@ -133,8 +167,9 @@ def fabric_egress_pallas(data, ext_addrs, view, *, need: int,
 
     ``data`` u32[H, B] / ``ext_addrs`` i32[H, B]: row ``i`` is the step
     batch of host ``view.host_ids[i]``, checked against that host's resident
-    shard for tenant ``view.hwpids[i]`` and decrypted with the keystream at
-    flat position ``i * padded_B + lane``.  Returns
+    shard for tenant ``view.hwpids[i]`` (flat or hierarchical search chosen
+    per host from that host's shard summary) and decrypted with the
+    keystream at flat position ``i * padded_B + lane``.  Returns
     ``(out u32[H, B], fault i32[H, B])``.
     """
     data = jnp.asarray(data, jnp.uint32)

@@ -7,25 +7,37 @@ range/permission predicate for an (8, 128) block of tagged addresses.  VMEM
 residency plays the role of the paper's permission cache: the table is loaded
 from HBM once per grid row, not per access.
 
-Two kernel variants share the wrapper:
+Three kernel variants share the wrapper:
 
-  mode="hier" (default) — two-level hierarchical search.  A precomputed
-    per-tile summary (min-start / max-end per ENTRY_TILE consecutive entries,
-    see ``repro.core.table.tile_summary``) is scanned first: a cheap
-    (8, 128, n_tiles) predicate finds each address's candidate tile, and the
-    expensive (8, 128, ENTRY_TILE) range/permission evaluation runs only for
+  mode="adaptive" (default) — batch-aware selection between the two fixed
+    kernels below.  The wrapper estimates the batch's candidate-tile density
+    from the tile summary it already holds (`summary_candidate_tiles`) and
+    passes the verdict into the kernel as a scalar operand: dense batches
+    (uniform traces, where the hierarchical summary scan is pure overhead)
+    run the flat scan, sparse batches (hot/locality traces) keep the
+    two-level win.  One compiled kernel serves both; the branch is a
+    per-grid-step ``lax.cond`` on the selector scalar.
+
+  mode="hier" — two-level hierarchical search.  A precomputed per-tile
+    summary (min-start / max-end per ENTRY_TILE consecutive entries, see
+    ``repro.core.table.tile_summary``) is scanned first: a cheap
+    (R, 128, n_tiles) predicate finds each address's candidate tile, and the
+    expensive (R, 128, ENTRY_TILE) range/permission evaluation runs only for
     tiles some lane actually needs (``lax.cond``-skipped otherwise).  Inner
     work drops from O(N) to O(N/ENTRY_TILE + k·ENTRY_TILE) per block, where k
     is the number of distinct candidate tiles — 1-2 for the locality-heavy
     access patterns the paper's 16 KiB cache exploits.
 
-  mode="flat" — the original brute-force O(B·N) scan, kept as the baseline
-    for benchmarks/kernels_bench.py.
+  mode="flat" — the original brute-force O(B·N) scan: the baseline for
+    benchmarks/kernels_bench.py, and the better kernel when nearly every
+    tile is a candidate anyway.
 
 Layout:
   addresses  i32[B]   -> grid-blocked (ADDR_BLOCK,) tiles, viewed (8, 128)
-  starts/ends i32[N]  -> whole-shard VMEM resident (index_map -> 0)
-  permbits   u32[N]   -> 2-bit field pre-extracted for the calling tenant
+  starts     i32[N]   -> whole-shard VMEM resident (index_map -> 0)
+  sizes/sizes_ok u32[N] -> diff-form spans (see `grant_sizes`): the range
+    and permission tests each collapse to one unsigned compare against
+    ``(page - start) as u32``, with a denied entry carrying a zero window
   tile_min/max i32[n_tiles] -> whole-resident summary (hier mode only)
   outputs    allowed u32[B] (0/1), idx i32[B]
 
@@ -46,12 +58,22 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.table import (HWPID_SHIFT, PAGE_MASK, SUMMARY_TILE,
-                              tenant_permbits, tile_summary)
+                              summary_candidate_tiles, tenant_permbits,
+                              tile_summary)
 from repro.kernels import bucket_pad, resolve_interpret
 
 ADDR_BLOCK = 1024          # addresses per grid step = (8, 128) lanes
 ENTRY_TILE = 1024          # table entries folded per inner loop step
 MAX_ENTRIES = 65536        # per-shard ceiling (64 K entries, 768 KiB VMEM)
+
+# Adaptive selector decision rule: the hierarchical kernel evaluates
+# candidate tiles plus a summary pass + per-tile dispatch overhead, so it
+# only wins while the mean candidate-tile count per kernel step stays below
+# ~3/4 of the shard's tiles.  (Measured crossover: hot traces sit at
+# 0.2-0.75 density and hier wins 1.1-4.4x; uniform traces sit at ~1.0 where
+# hier is 8-19% slower than flat.)
+HIER_DENSITY_NUM = 3
+HIER_DENSITY_DEN = 4
 
 assert ENTRY_TILE == SUMMARY_TILE, "kernel tile must match table summary tile"
 
@@ -131,65 +153,81 @@ class ShardViewCache:
         self._views.pop(key, None)
 
 
-def _match_tile(page, starts, ends, permbits, t, needv, carry):
-    """Evaluate one ENTRY_TILE slab of the table against an (8, 128) page
+def grant_sizes(starts, ends, permbits, needv):
+    """Per-entry diff-form operands: ``sizes[k] = ends[k] - starts[k]`` and
+    ``sizes_ok[k]`` = the same span if entry k grants ``needv``, else 0.
+    With these, the range test collapses to one unsigned compare per
+    entry — ``(page - start) as u32 < size`` — because a page below the
+    start wraps to a huge unsigned value and a denied entry has a zero
+    window.  O(N) work, done once per wrapper trace, off the B x N path."""
+    sizes = (jnp.asarray(ends, jnp.int32)
+             - jnp.asarray(starts, jnp.int32)).astype(jnp.uint32)
+    permbits = jnp.asarray(permbits, jnp.uint32)
+    sizes_ok = jnp.where((permbits & needv) == needv, sizes, jnp.uint32(0))
+    return sizes, sizes_ok
+
+
+def _match_tile(page, starts, sizes, sizes_ok, t, carry):
+    """Evaluate one ENTRY_TILE slab of the table against an (R, 128) page
     block; shared by the flat, hierarchical, and fabric-batched kernels.
-    Operands are plain (n,) arrays (callers read their refs once)."""
+    Operands are the diff-form arrays from `grant_sizes` (callers read
+    their refs once)."""
     any_hit, idx = carry
     s = jax.lax.dynamic_slice(starts, (t * ENTRY_TILE,), (ENTRY_TILE,))
-    e = jax.lax.dynamic_slice(ends, (t * ENTRY_TILE,), (ENTRY_TILE,))
-    pb = jax.lax.dynamic_slice(permbits, (t * ENTRY_TILE,), (ENTRY_TILE,))
-    # (8, 128, ENTRY_TILE) predicate evaluated on the VPU
-    in_r = (page[..., None] >= s) & (page[..., None] < e)
-    ok = in_r & (((pb & needv) == needv)[None, None, :])
-    any_hit = any_hit | jnp.any(ok, axis=-1)
+    sz = jax.lax.dynamic_slice(sizes, (t * ENTRY_TILE,), (ENTRY_TILE,))
+    szok = jax.lax.dynamic_slice(sizes_ok, (t * ENTRY_TILE,), (ENTRY_TILE,))
+    # (R, 128, ENTRY_TILE) predicate evaluated on the VPU: one subtract
+    # plus unsigned compares (wraparound stands in for the >= start test)
+    diff = (page[..., None] - s).astype(jnp.uint32)
+    in_r = diff < sz
+    any_hit = any_hit | jnp.any(diff < szok, axis=-1)
     local = jnp.argmax(in_r, axis=-1).astype(jnp.int32) + t * ENTRY_TILE
     idx = jnp.where(jnp.any(in_r, axis=-1) & (idx < 0), local, idx)
     return any_hit, idx
 
 
-def _permcheck_flat_kernel(addr_ref, starts_ref, ends_ref, permbits_ref,
-                           allowed_ref, idx_ref, *, hwpid: int, need: int,
+def _flat_search(page, starts, sizes, sizes_ok, n_tiles: int):
+    """Brute-force scan of every tile over an (R, 128) page block.
+    Returns (any_hit bool(R,128), idx i32(R,128))."""
+    def tile_step(t, carry):
+        return _match_tile(page, starts, sizes, sizes_ok, t, carry)
+
+    init = (jnp.zeros(page.shape, bool), jnp.full(page.shape, -1, jnp.int32))
+    return jax.lax.fori_loop(0, n_tiles, tile_step, init)
+
+
+def _permcheck_flat_kernel(addr_ref, starts_ref, sizes_ref, sizes_ok_ref,
+                           allowed_ref, idx_ref, *, hwpid: int,
                            n_entries: int):
     ext = addr_ref[...].astype(jnp.int32).reshape(8, 128)
     tag = ext >> HWPID_SHIFT
     page = ext & PAGE_MASK
     tag_ok = tag == jnp.int32(hwpid)
 
-    n_tiles = n_entries // ENTRY_TILE
-    needv = jnp.uint32(need)
-    starts, ends = starts_ref[...], ends_ref[...]
-    permbits = permbits_ref[...]
-
-    def tile_step(t, carry):
-        return _match_tile(page, starts, ends, permbits, t, needv, carry)
-
-    any_hit = jnp.zeros((8, 128), bool)
-    idx = jnp.full((8, 128), -1, jnp.int32)
-    any_hit, idx = jax.lax.fori_loop(0, n_tiles, tile_step, (any_hit, idx))
+    any_hit, idx = _flat_search(page, starts_ref[...], sizes_ref[...],
+                                sizes_ok_ref[...], n_entries // ENTRY_TILE)
 
     allowed_ref[...] = (tag_ok & any_hit).astype(jnp.uint32).reshape(
         allowed_ref.shape)
     idx_ref[...] = idx.reshape(idx_ref.shape)
 
 
-def _hier_search(page, starts, ends, permbits, tmin, tmax,
-                 n_tiles: int, needv):
-    """Two-level search over an (8, 128) page block; shared by the
+def _hier_search(page, starts, sizes, sizes_ok, tmin, tmax, n_tiles: int):
+    """Two-level search over an (R, 128) page block; shared by the
     hierarchical permcheck kernel, the fused egress kernel, and the
     fabric-batched multi-host kernel (operands are plain arrays — callers
     read and reshape their refs once).
 
-    Level 1: cheap (8, 128, n_tiles) overlap test against the summary.
+    Level 1: cheap (R, 128, n_tiles) overlap test against the summary.
     Sorted non-overlapping entries make the tile windows non-overlapping,
     so each lane has at most one candidate; evaluating a superset of tiles
     is only ever extra work, never a wrong answer.
 
-    Level 2: full (8, 128, ENTRY_TILE) evaluation only over the block's
+    Level 2: full (R, 128, ENTRY_TILE) evaluation only over the block's
     candidate span [t_lo, t_hi] (dynamic fori bounds: tiles outside the
     span cost nothing at all), with sparse middles cond-skipped.
 
-    Returns (any_hit bool(8,128), idx i32(8,128)).
+    Returns (any_hit bool(R,128), idx i32(R,128)).
     """
     cand = (page[..., None] >= tmin) & (page[..., None] < tmax)
     tile_needed = jnp.any(cand, axis=(0, 1))        # bool[n_tiles]
@@ -200,30 +238,139 @@ def _hier_search(page, starts, ends, permbits, tmin, tmax,
 
     def tile_step(t, carry):
         def heavy(c):
-            return _match_tile(page, starts, ends, permbits, t, needv, c)
+            return _match_tile(page, starts, sizes, sizes_ok, t, c)
         return jax.lax.cond(tile_needed[t], heavy, lambda c: c, carry)
 
-    any_hit = jnp.zeros((8, 128), bool)
-    idx = jnp.full((8, 128), -1, jnp.int32)
-    return jax.lax.fori_loop(t_lo, t_hi + 1, tile_step, (any_hit, idx))
+    init = (jnp.zeros(page.shape, bool), jnp.full(page.shape, -1, jnp.int32))
+    return jax.lax.fori_loop(t_lo, t_hi + 1, tile_step, init)
 
 
-def _permcheck_hier_kernel(addr_ref, starts_ref, ends_ref, permbits_ref,
+# ---------------------------------------------------------------------------
+# Cover-only searches (fused egress kernels)
+# ---------------------------------------------------------------------------
+# The fused check⊕decrypt kernels need only two bits per lane — "some entry
+# grants `need`" and "some entry covers the page" (for the NO_ENTRY vs PERM
+# fault split) — never the matched entry *index*.  Dropping the argmax/index
+# bookkeeping of `_match_tile` removes two full (R, 128, ENTRY_TILE)
+# reduction passes per tile, a measured double-digit slice of the fused
+# kernel's inner loop.
+
+def _cover_tile(page, starts, sizes, sizes_ok, t, carry):
+    any_ok, covered = carry
+    s = jax.lax.dynamic_slice(starts, (t * ENTRY_TILE,), (ENTRY_TILE,))
+    sz = jax.lax.dynamic_slice(sizes, (t * ENTRY_TILE,), (ENTRY_TILE,))
+    szok = jax.lax.dynamic_slice(sizes_ok, (t * ENTRY_TILE,), (ENTRY_TILE,))
+    diff = (page[..., None] - s).astype(jnp.uint32)
+    return (any_ok | jnp.any(diff < szok, axis=-1),
+            covered | jnp.any(diff < sz, axis=-1))
+
+
+def _cover_search(page, starts, sizes, sizes_ok, tmin, tmax, n_tiles: int,
+                  use_hier):
+    """Adaptive cover-only search over an (R, 128) page block: `use_hier`
+    (a traced scalar, typically a selector operand) picks the two-level
+    candidate-span walk or the brute-force scan per kernel step.  Returns
+    (any_ok bool(R,128), covered bool(R,128))."""
+    init = (jnp.zeros(page.shape, bool), jnp.zeros(page.shape, bool))
+
+    def flat(_):
+        def tile_step(t, carry):
+            return _cover_tile(page, starts, sizes, sizes_ok, t, carry)
+        return jax.lax.fori_loop(0, n_tiles, tile_step, init)
+
+    def hier(_):
+        cand = (page[..., None] >= tmin) & (page[..., None] < tmax)
+        tile_needed = jnp.any(cand, axis=(0, 1))
+        tile_ids = jax.lax.broadcasted_iota(jnp.int32, (1, n_tiles), 1)[0]
+        t_lo = jnp.min(jnp.where(tile_needed, tile_ids, n_tiles))
+        t_hi = jnp.max(jnp.where(tile_needed, tile_ids, -1))
+
+        def tile_step(t, carry):
+            def heavy(c):
+                return _cover_tile(page, starts, sizes, sizes_ok, t, c)
+            return jax.lax.cond(tile_needed[t], heavy, lambda c: c, carry)
+
+        return jax.lax.fori_loop(t_lo, t_hi + 1, tile_step, init)
+
+    if n_tiles <= 1:        # summary can't skip anything: no branch at all
+        return flat(None)
+    return jax.lax.cond(use_hier, hier, flat, None)
+
+
+def _permcheck_hier_kernel(addr_ref, starts_ref, sizes_ref, sizes_ok_ref,
                            tmin_ref, tmax_ref, allowed_ref, idx_ref, *,
-                           hwpid: int, need: int, n_entries: int):
+                           hwpid: int, n_entries: int):
     ext = addr_ref[...].astype(jnp.int32).reshape(8, 128)
     tag = ext >> HWPID_SHIFT
     page = ext & PAGE_MASK
     tag_ok = tag == jnp.int32(hwpid)
 
-    any_hit, idx = _hier_search(page, starts_ref[...], ends_ref[...],
-                                permbits_ref[...], tmin_ref[...],
-                                tmax_ref[...],
-                                n_entries // ENTRY_TILE, jnp.uint32(need))
+    any_hit, idx = _hier_search(page, starts_ref[...], sizes_ref[...],
+                                sizes_ok_ref[...], tmin_ref[...],
+                                tmax_ref[...], n_entries // ENTRY_TILE)
 
     allowed_ref[...] = (tag_ok & any_hit).astype(jnp.uint32).reshape(
         allowed_ref.shape)
     idx_ref[...] = idx.reshape(idx_ref.shape)
+
+
+def _permcheck_adaptive_kernel(addr_ref, sel_ref, starts_ref, sizes_ref,
+                               sizes_ok_ref, tmin_ref, tmax_ref, allowed_ref,
+                               idx_ref, *, hwpid: int, n_entries: int):
+    """Selector-driven kernel: `sel_ref[0]` (computed by the wrapper from
+    the tile summary) picks the hierarchical or flat search per grid step
+    via `lax.cond` — one compiled kernel covers every trace class."""
+    ext = addr_ref[...].astype(jnp.int32).reshape(8, 128)
+    tag = ext >> HWPID_SHIFT
+    page = ext & PAGE_MASK
+    tag_ok = tag == jnp.int32(hwpid)
+
+    n_tiles = n_entries // ENTRY_TILE
+    starts, sizes = starts_ref[...], sizes_ref[...]
+    sizes_ok = sizes_ok_ref[...]
+
+    def hier(_):
+        return _hier_search(page, starts, sizes, sizes_ok, tmin_ref[...],
+                            tmax_ref[...], n_tiles)
+
+    def flat(_):
+        return _flat_search(page, starts, sizes, sizes_ok, n_tiles)
+
+    any_hit, idx = jax.lax.cond(sel_ref[0] > 0, hier, flat, None)
+
+    allowed_ref[...] = (tag_ok & any_hit).astype(jnp.uint32).reshape(
+        allowed_ref.shape)
+    idx_ref[...] = idx.reshape(idx_ref.shape)
+
+
+def hier_profitable(ext_addrs, tile_min, tile_max, *,
+                    block: int = ADDR_BLOCK):
+    """Adaptive selector decision (traced bool scalar): run the
+    hierarchical search iff the batch's mean candidate-tile density per
+    ``block``-lane kernel step stays below HIER_DENSITY (3/4) of the
+    shard's tiles.  Uses only the tile summary the hier kernel needs
+    anyway; single-tile shards always pick flat (nothing to skip).
+    ``ext_addrs`` must already be padded to a multiple of ``block``."""
+    n_tiles = tile_min.shape[0]
+    if n_tiles <= 1:
+        return jnp.asarray(False)
+    pages = jnp.asarray(ext_addrs, jnp.int32) & PAGE_MASK
+    needed = summary_candidate_tiles(pages, tile_min, tile_max, block=block)
+    n_steps = needed.shape[0]
+    return (HIER_DENSITY_DEN * jnp.sum(needed)
+            <= HIER_DENSITY_NUM * n_steps * n_tiles)
+
+
+def selected_mode(ext_addrs, view: ShardView, *,
+                  block: int = ADDR_BLOCK) -> str:
+    """Host-side readout of the adaptive decision for a batch (concretizes
+    the selector; benchmarks record it next to the timings so selector
+    regressions are visible in the JSON)."""
+    b = jnp.asarray(ext_addrs, jnp.int32).reshape(-1)
+    bp = bucket_pad(b.shape[0], block)
+    ext = jnp.full((bp,), -1, jnp.int32).at[:b.shape[0]].set(b)
+    return "hier" if bool(hier_profitable(
+        ext, view.tile_min, view.tile_max, block=block)) else "flat"
 
 
 def _pad_shard(starts, ends, permbits):
@@ -249,30 +396,41 @@ def _pad_shard(starts, ends, permbits):
                    static_argnames=("hwpid", "need", "interpret", "mode"))
 def permcheck_view_pallas(ext_addrs, view: ShardView, *, hwpid: int,
                           need: int, interpret: bool | None = None,
-                          mode: str = "hier"):
+                          mode: str = "adaptive"):
     """Blocked Pallas permission check over a prepared `ShardView`.
 
     The view's entry arrays are already padded and summarized (see
     `make_shard_view` / `table_shard_view`), so repeated batches at one
     epoch skip all operand derivation.  Pads B to a power-of-two multiple
     of ADDR_BLOCK (bucketed -> varying batch sizes reuse jit caches).
-    ``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere.
+    ``mode="adaptive"`` (default) lets `hier_profitable` pick the search
+    per call; "hier"/"flat" force a fixed kernel (oracles for the property
+    tests, baselines for the benches).  ``interpret=None`` auto-selects:
+    compiled on TPU, interpreter elsewhere.
     """
-    if mode not in ("hier", "flat"):
+    if mode not in ("adaptive", "hier", "flat"):
         raise ValueError(f"unknown permcheck mode {mode!r}")
     interpret = resolve_interpret(interpret)
     b = ext_addrs.shape[0]
     bp = bucket_pad(b, ADDR_BLOCK)
     ext = jnp.full((bp,), -1, jnp.int32).at[:b].set(
         jnp.asarray(ext_addrs, jnp.int32))
-    s, e, pb = view.starts, view.ends, view.permbits
+    s = view.starts
+    sz, szok = grant_sizes(s, view.ends, view.permbits, jnp.uint32(need))
     np_ = s.shape[0]
+    n_tiles = view.n_tiles
+    if mode == "adaptive" and n_tiles <= 1:
+        mode = "flat"       # single tile: the summary can't skip anything
 
     grid = (bp // ADDR_BLOCK,)
     entry_specs = [
         pl.BlockSpec((np_,), lambda i: (0,)),
         pl.BlockSpec((np_,), lambda i: (0,)),
         pl.BlockSpec((np_,), lambda i: (0,)),
+    ]
+    summary_specs = [
+        pl.BlockSpec((n_tiles,), lambda i: (0,)),
+        pl.BlockSpec((n_tiles,), lambda i: (0,)),
     ]
     out_specs = [
         pl.BlockSpec((ADDR_BLOCK,), lambda i: (i,)),
@@ -284,18 +442,24 @@ def permcheck_view_pallas(ext_addrs, view: ShardView, *, hwpid: int,
     ]
     if mode == "flat":
         kernel = functools.partial(_permcheck_flat_kernel, hwpid=hwpid,
-                                   need=need, n_entries=np_)
-        operands = (ext, s, e, pb)
+                                   n_entries=np_)
+        operands = (ext, s, sz, szok)
         in_specs = [pl.BlockSpec((ADDR_BLOCK,), lambda i: (i,))] + entry_specs
-    else:
-        n_tiles = view.n_tiles
+    elif mode == "hier":
         kernel = functools.partial(_permcheck_hier_kernel, hwpid=hwpid,
-                                   need=need, n_entries=np_)
-        operands = (ext, s, e, pb, view.tile_min, view.tile_max)
+                                   n_entries=np_)
+        operands = (ext, s, sz, szok, view.tile_min, view.tile_max)
         in_specs = ([pl.BlockSpec((ADDR_BLOCK,), lambda i: (i,))] +
-                    entry_specs +
-                    [pl.BlockSpec((n_tiles,), lambda i: (0,)),
-                     pl.BlockSpec((n_tiles,), lambda i: (0,))])
+                    entry_specs + summary_specs)
+    else:
+        sel = hier_profitable(ext, view.tile_min, view.tile_max)
+        kernel = functools.partial(_permcheck_adaptive_kernel, hwpid=hwpid,
+                                   n_entries=np_)
+        operands = (ext, sel.astype(jnp.int32).reshape(1), s, sz, szok,
+                    view.tile_min, view.tile_max)
+        in_specs = ([pl.BlockSpec((ADDR_BLOCK,), lambda i: (i,)),
+                     pl.BlockSpec((1,), lambda i: (0,))] +
+                    entry_specs + summary_specs)
 
     allowed, idx = pl.pallas_call(
         kernel,
@@ -312,7 +476,7 @@ def permcheck_view_pallas(ext_addrs, view: ShardView, *, hwpid: int,
                    static_argnames=("hwpid", "need", "interpret", "mode"))
 def permcheck_pallas(ext_addrs, starts, ends, permbits, *, hwpid: int,
                      need: int, interpret: bool | None = None,
-                     mode: str = "hier"):
+                     mode: str = "adaptive"):
     """Raw-array convenience wrapper: derives a ShardView per call (padding
     entries use INT32_MAX sentinels that never match) and runs
     `permcheck_view_pallas`.  Jitted so the derivation traces into the

@@ -68,3 +68,29 @@ def hit_curve(keys: np.ndarray, capacities: list[int]) -> dict[int, float]:
     rd = reuse_distances(keys)
     t = max(len(keys), 1)
     return {c: float(np.count_nonzero(rd >= c)) / t for c in capacities}
+
+
+def set_assoc_hits(keys: np.ndarray, n_sets: int, ways: int) -> np.ndarray:
+    """Boolean hit mask for a set-associative LRU: ``n_sets`` sets indexed
+    by ``key % n_sets``, per-set LRU over ``ways`` lines.
+
+    A set-associative LRU is per-set fully-associative LRU of capacity
+    ``ways`` over the subsequence of accesses mapping to that set, so each
+    set's hits come from one reuse-distance pass over its subsequence.
+    ``ways >= n_lines`` or ``n_sets == 1`` degenerates to `lru_hits`.
+    """
+    keys = np.asarray(keys)
+    t = keys.shape[0]
+    hits = np.empty(t, bool)
+    if t == 0:
+        return hits
+    if n_sets <= 1:
+        return lru_hits(keys, ways)
+    sets = keys % n_sets
+    order = np.argsort(sets, kind="stable")
+    ss = sets[order]
+    bounds = np.flatnonzero(np.diff(ss, prepend=-1, append=n_sets + 1))
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        idx = order[a:b]
+        hits[idx] = reuse_distances(keys[idx]) < ways
+    return hits

@@ -30,7 +30,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.workloads.gapbs import Trace
-from .lru import reuse_distances
+from .lru import reuse_distances, set_assoc_hits
 
 
 def positional_distances(keys: np.ndarray) -> np.ndarray:
@@ -170,10 +170,14 @@ def _queue_factor(cfg: SimConfig, packets: float, cycles_est: float,
 def simulate(trace: Trace, *, system: str = "space-control",
              n_entries: int = 1, cache_bytes: int = 0, n_hosts: int = 1,
              cfg: SimConfig = SimConfig(), kernel: str = "?",
-             sdm_pages: int | None = None,
+             sdm_pages: int | None = None, cache_ways: int | None = None,
              warmup_frac: float = 0.4) -> SimResult:
     """Timing model for one host's trace.  system: cxl | space-control |
     flat-table | deact-like | mondrian-ext.
+
+    ``cache_ways=None`` models the permission cache as fully-associative
+    LRU (exact via reuse distances); an integer models a set-associative
+    LRU with that many ways over ``cache_bytes // 64 // ways`` sets.
 
     The first `warmup_frac` of the trace warms the LLC / permission-cache
     state (reuse distances see it) but is excluded from the metrics —
@@ -248,8 +252,14 @@ def simulate(trace: Trace, *, system: str = "space-control",
     # Space-Control's checker; prior-work modes get a generic MSHR merge of
     # back-to-back requests only (window 4); mondrian-ext none (fig14 note).
     if cache_bytes > 0:
-        prd = reuse_distances(node_stream)
-        cache_hit = prd < (cache_bytes // 64)
+        n_lines = cache_bytes // 64
+        if cache_ways is not None and cache_ways < n_lines:
+            cache_hit = set_assoc_hits(node_stream,
+                                       max(n_lines // cache_ways, 1),
+                                       cache_ways)
+        else:
+            prd = reuse_distances(node_stream)
+            cache_hit = prd < n_lines
     else:
         cache_hit = np.zeros(len(node_stream), bool)
     pdist = positional_distances(node_stream)
@@ -322,13 +332,13 @@ def simulate(trace: Trace, *, system: str = "space-control",
 
 def run_pair(trace: Trace, *, n_entries: int, cache_bytes: int,
              n_hosts: int, kernel: str, sdm_pages: int | None = None,
-             system: str = "space-control",
+             system: str = "space-control", cache_ways: int | None = None,
              cfg: SimConfig = SimConfig()) -> tuple[SimResult, SimResult]:
     """(system result, cxl baseline) with cpi_norm filled in."""
     base = simulate(trace, system="cxl", n_hosts=n_hosts, kernel=kernel,
                     sdm_pages=sdm_pages, cfg=cfg)
     res = simulate(trace, system=system, n_entries=n_entries,
                    cache_bytes=cache_bytes, n_hosts=n_hosts, kernel=kernel,
-                   sdm_pages=sdm_pages, cfg=cfg)
+                   sdm_pages=sdm_pages, cache_ways=cache_ways, cfg=cfg)
     res.cpi_norm = res.cpi / base.cpi
     return res, base

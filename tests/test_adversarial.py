@@ -270,3 +270,57 @@ def test_permbits_of_revoked_tenant_are_zero_everywhere():
     fm.revoke_hwpid(pid)
     pb = np.asarray(tenant_permbits(fm.table.to_device(), pid))
     assert np.all(pb == 0)
+
+
+# ---------------------------------------------------------------------------
+# set-aliasing across cache ways
+# ---------------------------------------------------------------------------
+
+def test_aliasing_across_ways_targeted_bisnp():
+    """An attacker whose grant aliases the victim's cache set (same low
+    page bits, different way) is dropped by the targeted BISnp on revoke,
+    while the innocent aliases sharing that set keep their cached mappings
+    — no way-confusion grants, no collateral flush.
+    """
+    fm, (h0, _) = _system()
+    innocent = h0.get_next_pid()
+    attacker = h0.get_next_pid()
+    # three innocent pages + one attacker page, all aliasing one 4-way set
+    # (same residue mod 64); innocent grants commit first so the attacker's
+    # removal shifts no surviving entry index.
+    inn_pages = [9, 9 + 64, 9 + 128]
+    atk_page = 9 + 192
+    for p in inn_pages:
+        fm.propose(Proposal(0, innocent, 1, p, 1, PERM_RW))
+    fm.propose(Proposal(0, attacker, 1, atk_page, 1, PERM_RW))
+    holder = _wired_cache(fm)
+    assert holder["cache"].n_ways == 4
+    assert len({p % holder["cache"].n_sets
+                for p in inn_pages + [atk_page]}) == 1
+    local = make_hwpid_local([innocent, attacker])
+    table = fm.table.to_device()
+    hw = np.asarray([innocent] * 3 + [attacker], np.int32)
+    pg = np.asarray(inn_pages + [atk_page], np.int32)
+    ext = pack_ext_addr(hw, pg)
+    wr = jnp.zeros(4, bool)
+    r1, holder["cache"] = cached_check_access_jit(table, local, ext, wr,
+                                                  holder["cache"])
+    assert bool(np.asarray(r1.allowed).all())
+    r2, holder["cache"] = cached_check_access_jit(table, local, ext, wr,
+                                                  holder["cache"])
+    assert int(np.asarray(r2.probes).sum()) == 0   # all 4 aliases cached
+
+    fm.revoke_hwpid(attacker)                      # targeted BISnp
+    table2 = fm.table.to_device()
+    # only the attacker's way was dropped: 3 innocent tags survive
+    assert int((np.asarray(holder["cache"].tag) >= 0).sum()) == 3
+    assert atk_page not in set(np.asarray(holder["cache"].tag).ravel())
+    r3, holder["cache"] = cached_check_access_jit(table2, local, ext, wr,
+                                                  holder["cache"])
+    allowed = np.asarray(r3.allowed)
+    assert bool(allowed[:3].all()), "innocent aliases lost their grant"
+    assert not bool(allowed[3]), "revoked attacker still allowed"
+    # innocent lanes stayed on the cached path (no re-search after the
+    # targeted invalidation); only the attacker lane pays the miss
+    probes = np.asarray(r3.probes)
+    assert int(probes[:3].sum()) == 0 and int(probes[3]) > 0

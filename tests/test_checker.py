@@ -1,10 +1,19 @@
-"""Permission checker (paper §4.2.3): fault codes + oracle equivalence."""
+"""Permission checker (paper §4.2.3): fault codes, PLRU replacement units,
+and oracle equivalence.
+
+The property tests run under hypothesis when it is installed; a seeded
+non-hypothesis sweep of the same oracles always runs, so this module never
+skips entirely on a minimal environment.
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # minimal CI image: seeded fallbacks still run
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (
     FAULT_NO_ABITS,
@@ -82,16 +91,7 @@ def test_allowed_has_no_fault():
     assert bool((r.entry_idx == 0).all())
 
 
-grant = st.tuples(st.integers(0, 2000), st.integers(1, 200),
-                  st.integers(1, 8), st.sampled_from([PERM_R, PERM_W, PERM_RW]))
-
-
-@settings(max_examples=40, deadline=None)
-@given(st.lists(grant, min_size=1, max_size=10),
-       st.lists(st.tuples(st.integers(0, 8), st.integers(0, 2200),
-                          st.booleans()), min_size=1, max_size=32),
-       st.sets(st.integers(1, 8)))
-def test_checker_matches_naive_oracle(grants, accesses, local_set):
+def _check_against_oracle(grants, accesses, local_set):
     t = HostTable(capacity=1024)
     oracle = {}
     for start, n, hwpid, perm in grants:
@@ -112,6 +112,88 @@ def test_checker_matches_naive_oracle(grants, accesses, local_set):
         need = PERM_W if write else PERM_R
         expect = (hwpid > 0 and hwpid in local_set and (perm & need) == need)
         assert bool(r.allowed[i]) == expect, (hwpid, page, write, perm)
+
+
+def test_checker_matches_naive_oracle_seeded():
+    """Seeded sweep of the oracle property (runs with or without
+    hypothesis): random overlapping grants, random accesses."""
+    rng = np.random.default_rng(7)
+    perms = [PERM_R, PERM_W, PERM_RW]
+    for _ in range(25):
+        grants = [(int(rng.integers(0, 2000)), int(rng.integers(1, 200)),
+                   int(rng.integers(1, 9)), perms[int(rng.integers(0, 3))])
+                  for _ in range(int(rng.integers(1, 11)))]
+        accesses = [(int(rng.integers(0, 9)), int(rng.integers(0, 2200)),
+                     bool(rng.integers(0, 2)))
+                    for _ in range(int(rng.integers(1, 33)))]
+        local_set = {int(p) for p in
+                     rng.choice(np.arange(1, 9), rng.integers(1, 5),
+                                replace=False)}
+        _check_against_oracle(grants, accesses, local_set)
+
+
+if HAVE_HYPOTHESIS:
+    grant = st.tuples(st.integers(0, 2000), st.integers(1, 200),
+                      st.integers(1, 8),
+                      st.sampled_from([PERM_R, PERM_W, PERM_RW]))
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(grant, min_size=1, max_size=10),
+           st.lists(st.tuples(st.integers(0, 8), st.integers(0, 2200),
+                              st.booleans()), min_size=1, max_size=32),
+           st.sets(st.integers(1, 8)))
+    def test_checker_matches_naive_oracle(grants, accesses, local_set):
+        _check_against_oracle(grants, accesses, local_set)
+
+
+# ---------------------------------------------------------------------------
+# tree-PLRU replacement units (the 4-way x 64-set permission cache)
+# ---------------------------------------------------------------------------
+
+def _plru():
+    from repro.core.checker import plru_touch, plru_victim
+    return plru_touch, plru_victim
+
+
+def test_plru_fresh_bits_pick_way_zero():
+    _, victim = _plru()
+    for ways in (1, 2, 4, 8):
+        assert int(victim(jnp.uint32(0), ways)) == 0
+
+
+def test_plru_victim_never_equals_touched_way():
+    """Touching a way repoints every node on its path away from it, so the
+    next victim walk cannot land on it — for every state and way."""
+    touch, victim = _plru()
+    for ways in (2, 4, 8):
+        n_states = 1 << (ways - 1)
+        for bits in range(n_states):
+            for way in range(ways):
+                b2 = touch(jnp.uint32(bits), jnp.asarray(way), ways)
+                assert int(victim(b2, ways)) != way, (ways, bits, way)
+
+
+def test_plru_full_rotation_finds_true_lru():
+    """Touching ways 0..3 in order leaves way 0 as the victim (tree-PLRU
+    agrees with true LRU on a full sequential rotation)."""
+    touch, victim = _plru()
+    bits = jnp.uint32(0)
+    for way in range(4):
+        bits = touch(bits, jnp.asarray(way), 4)
+    assert int(victim(bits, 4)) == 0
+
+
+def test_plru_vectorized_matches_scalar():
+    touch, victim = _plru()
+    rng = np.random.default_rng(3)
+    bits = jnp.asarray(rng.integers(0, 8, 64), jnp.uint32)
+    ways = jnp.asarray(rng.integers(0, 4, 64), jnp.int32)
+    vec = touch(bits, ways, 4)
+    for i in range(64):
+        assert int(vec[i]) == int(touch(bits[i], ways[i], 4)), i
+    vvec = victim(bits, 4)
+    for i in range(64):
+        assert int(vvec[i]) == int(victim(bits[i], 4)), i
 
 
 def test_batch_mixed_faults():

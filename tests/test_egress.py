@@ -335,10 +335,16 @@ def test_direct_mapped_matches_lru_without_conflicts(rng):
 
 def test_perm_cache_capacity_validation():
     with pytest.raises(ValueError):
-        make_perm_cache(100)            # not a multiple of 64
+        make_perm_cache(100)            # not a multiple of 64 B x ways
     with pytest.raises(ValueError):
-        make_perm_cache(192)            # 3 sets: not a power of two
-    assert make_perm_cache(16 * 1024).n_sets == 256
+        make_perm_cache(192 * 4)        # 3 sets: not a power of two
+    with pytest.raises(ValueError):
+        make_perm_cache(16 * 1024, ways=3)   # ways must be a power of two
+    c = make_perm_cache(16 * 1024)      # paper default: 16 KiB, 4-way
+    assert c.n_sets == 64 and c.n_ways == 4
+    assert c.capacity_bytes == 16 * 1024
+    dm = make_perm_cache(16 * 1024, ways=1)  # direct-mapped comparison
+    assert dm.n_sets == 256 and dm.n_ways == 1
 
 
 # ---------------------------------------------------------------------------
@@ -359,3 +365,69 @@ def test_permtable_shard_plumbing():
     assert specs["starts"] == P("model")
     assert specs["perms"] == P("model", None)
     assert specs["tile_min"] == P("model")
+
+
+# ---------------------------------------------------------------------------
+# set-associative conflict behaviour + adaptive mode equivalence
+# ---------------------------------------------------------------------------
+
+def test_cache_conflict_trace_steady_hit_4way():
+    """Four pages aliasing one set: the 4-way cache holds them all (second
+    batch is all-hit, search skipped) where a direct-mapped cache of the
+    same capacity keeps thrashing the one slot."""
+    fm = FabricManager(sdm_pages=1 << 16, table_capacity=4096)
+    h0 = fm.enroll_host(0)
+    pid = h0.get_next_pid()
+    fm.propose(Proposal(0, pid, 1, 0, 2048, PERM_RW))
+    table = fm.table.to_device()
+    local = make_hwpid_local([pid])
+    # same residue mod 64 (4-way sets) AND mod 256 (direct-mapped sets)
+    pages = np.asarray([5, 5 + 256, 5 + 512, 5 + 768], np.int32)
+    batch = np.tile(pages, 32)
+    ext = pack_ext_addr(np.full(batch.size, pid, np.int32), batch)
+    wr = jnp.zeros(batch.size, bool)
+
+    c4 = make_perm_cache(epoch=fm.epoch, ways=4)
+    assert ({int(p) % c4.n_sets for p in pages} == {5})
+    _, c4 = cached_check_access_jit(table, local, ext, wr, c4)
+    r2, c4b = cached_check_access_jit(table, local, ext, wr, c4)
+    assert int(np.asarray(r2.probes).sum()) == 0       # all-hit, no search
+    assert int(c4b.hits - c4.hits) == batch.size
+    assert np.asarray(r2.allowed).all()
+
+    c1 = make_perm_cache(epoch=fm.epoch, ways=1)
+    assert ({int(p) % c1.n_sets for p in pages} == {5})
+    _, c1 = cached_check_access_jit(table, local, ext, wr, c1)
+    r2d, c1b = cached_check_access_jit(table, local, ext, wr, c1)
+    hit_rate_dm = int(c1b.hits - c1.hits) / batch.size
+    assert hit_rate_dm < 0.5                            # one slot, 4 aliases
+    np.testing.assert_array_equal(np.asarray(r2.allowed),
+                                  np.asarray(r2d.allowed))
+
+
+def test_adaptive_mode_bit_exact_vs_oracles(rng):
+    """Property: for any shard/trace, mode="adaptive" returns bit-for-bit
+    what its selected mode returns — and flat and hier agree with each
+    other, so the selector can never change a verdict, only the cost."""
+    from repro.kernels.permcheck import make_shard_view, selected_mode
+    for _ in range(6):
+        n_entries = int(rng.choice([512, 2048, 4096]))
+        batch = int(rng.choice([256, 2048]))
+        starts, ends, perms = _mk_table(rng, n_entries, 1 << 20)
+        view = make_shard_view(starts, ends, perms)
+        # mix of in-grant, out-of-grant, and foreign-tag addresses
+        pages = np.where(
+            rng.random(batch) < 0.5,
+            starts[rng.integers(0, n_entries, batch)],
+            rng.integers(0, 1 << 20, batch)).astype(np.int32)
+        tags = rng.choice([3, 3, 3, 2, 0], batch).astype(np.int32)
+        ext = jnp.asarray((tags << HWPID_SHIFT) | pages, jnp.int32)
+        res = {m: permcheck_pallas(ext, starts, ends, perms, hwpid=3,
+                                   need=1, mode=m)
+               for m in ("flat", "hier", "adaptive")}
+        chosen = selected_mode(ext, view)
+        for field in range(2):                     # (allowed, entry_idx)
+            a = np.asarray(res["adaptive"][field])
+            np.testing.assert_array_equal(a, np.asarray(res[chosen][field]))
+            np.testing.assert_array_equal(np.asarray(res["flat"][field]),
+                                          np.asarray(res["hier"][field]))
