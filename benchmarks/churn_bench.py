@@ -6,8 +6,9 @@ during continuous batching, on the real decode engine.
 
 Where `kernels_bench.py --only churn` isolates the *check-path* cost of
 churn (the acceptance ratio recorded in BENCH_kernels.json), this bench
-drives the whole `launch.serve.ServeEngine`: model prefill/decode, KV page
-accounting, FM transactions, BISnp-wired PermCache, page-span reuse.  It
+drives the whole `launch.serve.ServeEngine` on its `ShardedFabric`: model
+prefill/decode, KV page accounting through the coalescing span allocator,
+FM transactions, per-host BISnp-fenced PermCaches, page-span reuse.  It
 reports per-step wall-clock with and without churn plus lifecycle
 counters, and asserts the basic lifecycle invariants so CI fails loudly if
 churn breaks serving.
@@ -56,8 +57,8 @@ def _drive(engine, rng, *, rounds: int, gen: int, plen: int) -> dict:
         "decode_steps": engine.steps,
         "faults": engine.faults,
         "bisnp_events": engine.bisnp_events,
-        "perm_cache_hit_rate": round(engine.permcache.hit_rate, 4),
-        "pool_pages": engine.pool.total_pages,
+        "perm_cache_hit_rate": round(engine.cache_stats()["hit_rate"], 4),
+        "free_pages_host1": engine.fabric.free_pages(1),
     }
 
 

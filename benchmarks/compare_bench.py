@@ -34,6 +34,17 @@ trajectories):
     1.3`` over the two-launch pipeline;
   * tenant churn stays serveable: ``churn.churn_over_static_x <= 1.5``.
 
+With ``--scale BENCH_scale.json`` the fabric-scale record is gated too
+(floors only — the scale bench has no committed baseline):
+
+  * storage overhead (measured AND worst-case) <= 2 % at the largest point;
+  * multi-tenant hosts are real: >= 4 co-resident tenants per host at the
+    32-host packing point;
+  * multi-tenant churn stays serveable: ``multi_tenant.churn_over_static_x
+    <= 1.5``;
+  * revoking one co-resident tenant zeroes exactly its kernel rows
+    (``multi_tenant.revocation_zeroes_only_victim``).
+
 Missing metrics fail loudly (a bench silently dropping out of the JSON is
 itself a regression).  Exit status: 0 clean, 1 regression/missing.
 """
@@ -85,6 +96,36 @@ FLOORS = [
      lambda r: float(r["churn"]["churn_over_static_x"]), 1.5, "<="),
 ]
 
+# floors applied to the fabric-scale record (`--scale`); no baseline —
+# these are acceptance claims, not trajectories
+SCALE_FLOORS = [
+    ("scale_storage_overhead_max",
+     lambda r: float(r["headline"]["storage_overhead_pct"]), 2.0, "<="),
+    ("scale_worst_case_storage_max",
+     lambda r: float(r["headline"]["worst_case_storage_pct"]), 2.0, "<="),
+    ("scale_mt_procs_per_host_min",
+     lambda r: float(r["multi_tenant"]["procs_per_host_max"]), 4.0, ">="),
+    ("scale_mt_churn_over_static_max",
+     lambda r: float(r["multi_tenant"]["churn_over_static_x"]), 1.5, "<="),
+    ("scale_mt_revocation_isolation",
+     lambda r: float(r["multi_tenant"]["revocation_zeroes_only_victim"]),
+     1.0, ">="),
+]
+
+
+def check_floors(rec: dict, floors: list) -> list:
+    """Apply (name, extractor, bound, direction) floors to one record."""
+    out = []
+    for name, extract, bound, op in floors:
+        try:
+            new = extract(rec)
+        except (KeyError, TypeError):
+            out.append((name, bound, None, False))
+            continue
+        ok = new >= bound if op == ">=" else new <= bound
+        out.append((name, bound, new, ok))
+    return out
+
 
 def compare(baseline: dict, fresh: dict, *, max_regression: float) -> list:
     """Returns [(metric, bound, fresh, ok)] — relative metrics first (bound
@@ -100,14 +141,7 @@ def compare(baseline: dict, fresh: dict, *, max_regression: float) -> list:
             out.append((name, base, None, False))
             continue
         out.append((name, base, new, new >= (1 - max_regression) * base))
-    for name, extract, bound, op in FLOORS:
-        try:
-            new = extract(fresh)
-        except (KeyError, TypeError):
-            out.append((name, bound, None, False))
-            continue
-        ok = new >= bound if op == ">=" else new <= bound
-        out.append((name, bound, new, ok))
+    out += check_floors(fresh, FLOORS)
     return out
 
 
@@ -115,18 +149,26 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default="BENCH_kernels.json",
                     help="committed baseline JSON")
-    ap.add_argument("--fresh", required=True,
-                    help="freshly produced JSON to validate")
+    ap.add_argument("--fresh", default=None,
+                    help="freshly produced kernels JSON to validate")
+    ap.add_argument("--scale", default=None,
+                    help="fabric-scale JSON (BENCH_scale.json) to gate")
     ap.add_argument("--max-regression", type=float, default=0.25,
                     help="tolerated fractional drop (default 25%%)")
     args = ap.parse_args()
+    if args.fresh is None and args.scale is None:
+        ap.error("nothing to gate: pass --fresh and/or --scale")
 
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    with open(args.fresh) as f:
-        fresh = json.load(f)
-
-    rows = compare(baseline, fresh, max_regression=args.max_regression)
+    rows = []
+    if args.fresh is not None:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+        rows += compare(baseline, fresh, max_regression=args.max_regression)
+    if args.scale is not None:
+        with open(args.scale) as f:
+            rows += check_floors(json.load(f), SCALE_FLOORS)
     failed = False
     print(f"{'metric':36s} {'bound':>9s} {'fresh':>9s}  verdict")
     for name, base, new, ok in rows:

@@ -111,6 +111,21 @@ class BISnpBus:
             self._deliver_one(host_id, q)
         return n
 
+    def deliver_until(self, host_id: int, epoch: int) -> int:
+        """Deliver queued events at one host up to and including `epoch` —
+        the serving engine's per-step fence close: before checking a host's
+        tenants against a table snapshot, the host must have observed every
+        commit at or below that snapshot's epoch, without forcing a
+        fabric-wide `quiesce()`.  Events past `epoch` stay queued (the
+        per-host FIFO is epoch-ordered, so the prefix is exact).  Returns
+        the number delivered."""
+        q = self._queues[host_id]
+        n = 0
+        while q and q[0].epoch <= epoch:
+            self._deliver_one(host_id, q)
+            n += 1
+        return n
+
     def drain(self, host_id: int | None = None) -> int:
         """Deliver everything queued at one host (or, with None, at all)."""
         if host_id is not None:

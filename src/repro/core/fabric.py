@@ -28,16 +28,29 @@ While a host lags the bus its cache epoch trails the table epoch, so
 shard — stale mappings degrade to misses, never stale grants — and the
 moment the host drains its queue the fence closes and the all-hit fast path
 returns.  One shard-index subtlety: cached entry indices are SHARD-LOCAL,
-but `BISnpEvent.min_entry_idx` announces GLOBAL index shifts, and the two
-cannot be reconciled host-side.  `HostRuntime.on_bisnp` therefore applies
-index-shifting commits (inserts/vacuum, `min_entry_idx is not None`) as a
-full index flush, while index-stable commits — in-place revokes, the
-tenant-churn hot path — keep the targeted-drop fast path.  Globally
-index-stable is still not enough: a count-preserving geometry change can
-grow an entry INTO the resident range and shift later entries' shard-local
-ranks, so shard extraction additionally diffs the kept-index set against
-the previous epoch's and flushes the cache's index mappings whenever
-membership moved (see `_resident_entries`).
+but `BISnpEvent.min_entry_idx` announces the smallest GLOBAL index that
+shifted.  `HostRuntime.on_bisnp` forwards that index verbatim as the drop
+threshold: a shard is a subsequence of the global table, so a tail insert
+past every resident entry drops nothing on this host, and an earlier shift
+drops at most what shard extraction would flush anyway.  Exactness never
+rests on this drop — a commit can move this host's shard-local ranks even
+without a global index shift (a count-preserving geometry change can grow
+an entry INTO the resident range), so shard extraction diffs the kept
+GLOBAL index set against the previous epoch's and flushes the cache's
+index mappings whenever membership moved (see `_resident_entries`), and
+extraction precedes every fenced probe.  The forwarded threshold is the
+optimization (no more fleet-wide flush on every tail insert); the
+extraction diff is the correctness backstop.
+
+Multi-tenant hosts
+------------------
+A `HostRuntime` carries MANY HWPIDs (the paper's headline deployment puts
+127 processes on far fewer hosts).  `fabric_view` accepts
+``{host_id: hwpid}`` or ``{host_id: [hwpids...]}`` and emits ONE stacked
+kernel row per (host, tenant) pair — co-resident tenants share the host's
+epoch-memoized shard arrays but carry their own pre-extracted permbits
+row, so revoking one tenant re-derives rows without ever perturbing a
+co-resident tenant's verdicts.
 """
 from __future__ import annotations
 
@@ -94,15 +107,18 @@ class HostRuntime:
     # -- bus consumer (the old sync-broadcast logic, now queue-driven) -------
     def on_bisnp(self, ev: BISnpEvent) -> None:
         """Apply one delivered back-invalidate: targeted PermCache drop with
-        the epoch fence's replay/gap semantics.  Index-shifting commits
-        flush index mappings entirely (global `min_entry_idx` cannot be
-        translated into this host's shard-local index space — see module
-        docstring); index-stable commits stay targeted."""
+        the epoch fence's replay/gap semantics.  `min_entry_idx` (global) is
+        forwarded verbatim as the local drop threshold: shard-local ranks
+        never exceed their global indices, so a tail insert in another
+        host's shard drops nothing here instead of flushing every cached
+        index mapping on every host.  Correctness does not depend on this
+        drop — `_resident_entries` diffs the kept-index set per epoch and
+        flushes whenever this host's local ranks actually moved, and
+        extraction precedes every fenced probe (see module docstring)."""
         self.bisnp_seen += 1
-        min_shifted = None if ev.min_entry_idx is None else 0
         self.permcache = invalidate_perm_cache(
             self.permcache, ev.start_page, ev.n_pages, ev.epoch,
-            min_shifted_entry=min_shifted)
+            min_shifted_entry=ev.min_entry_idx)
 
     # -- resident shard ------------------------------------------------------
     def add_resident_range(self, start_page: int, n_pages: int) -> None:
@@ -112,6 +128,21 @@ class HostRuntime:
         arrays, per-tenant views, the fabric-level stacked view) must be
         dropped explicitly."""
         self._extra_ranges.append((start_page, start_page + n_pages))
+        self._shard_epoch = -1  # force re-extraction
+        self.views = _permcheck_mod().ShardViewCache()
+        self.fabric._fabric_view_key = None
+
+    def remove_resident_range(self, start_page: int, n_pages: int) -> None:
+        """Release ONE occurrence of a shared resident range — the evict
+        half of `add_resident_range`, which previously did not exist: shared
+        regions pinned by `grant_shared` stayed resident forever, so a
+        host's shard grew monotonically under churn and evicted tenants'
+        pages stayed extractable.  Ranges are occurrence-counted (two
+        tenants sharing a region pin it twice; evicting one must leave the
+        other's residency intact).  Same memo-drop discipline as adding —
+        and the shrunken kept-index set makes `_resident_entries` flush the
+        cache's index mappings on the next extraction."""
+        self._extra_ranges.remove((start_page, start_page + n_pages))
         self._shard_epoch = -1  # force re-extraction
         self.views = _permcheck_mod().ShardViewCache()
         self.fabric._fabric_view_key = None
@@ -226,11 +257,12 @@ class HostRuntime:
 
 
 class FabricView(NamedTuple):
-    """Stacked per-host shard operands for the batched multi-host egress
-    kernel (`repro.kernels.fabric_egress.fabric_egress_pallas`): row `i`
-    holds host `host_ids[i]`'s resident shard padded to the fleet-wide
-    entry count, with `permbits` pre-extracted for that host's tenant
-    `hwpids[i]`."""
+    """Stacked per-(host, tenant) shard operands for the batched multi-host
+    egress kernel (`repro.kernels.fabric_egress.fabric_egress_pallas`):
+    row `i` holds host `host_ids[i]`'s resident shard padded to the
+    fleet-wide entry count, with `permbits` pre-extracted for tenant
+    `hwpids[i]`.  A multi-tenant host contributes one row per tenant —
+    `host_ids` may repeat; rows are independent in the kernel."""
     starts: jax.Array     # i32[H, N]
     ends: jax.Array       # i32[H, N]
     permbits: jax.Array   # u32[H, N]
@@ -297,10 +329,24 @@ class ShardedFabric:
         self.perm_cache_bytes = perm_cache_bytes
         self.runtimes: dict[int, HostRuntime] = {}
         self._alloc_cursor: dict[int, int] = {}
+        # per-host free list: sorted by start page, adjacent spans merged on
+        # insert (`_release_span`) — never append raw tuples directly
         self._free_spans: dict[int, list[tuple[int, int]]] = {}
         self._grants: dict[int, tuple[int, int, int]] = {}
+        # hwpid -> [(host_id, start, n)] shared regions pinned resident by
+        # grant_shared, released on evict (the residency-leak fix)
+        self._shared_grants: dict[int, list[tuple[int, int, int]]] = {}
+        # evict runs one vacuum() commit when tombstones exceed this
+        # fraction of table capacity (None disables) — mixed-size churn
+        # with the coalescing allocator re-admits at fresh offsets, so
+        # tombstones are no longer reliably reclaimed by overlapping
+        # inserts and would otherwise exhaust the table
+        self.vacuum_tombstone_frac: float | None = 0.25
+        self.vacuums = 0
         self._fabric_view: FabricView | None = None
         self._fabric_view_key = None
+        self.view_rebuilds = 0
+        self.view_reuses = 0
 
     # -- topology ------------------------------------------------------------
     def shard_range(self, host_id: int) -> tuple[int, int]:
@@ -346,7 +392,7 @@ class ShardedFabric:
         if label is None:
             rt.engine.release_pid(hwpid)
             rt._grant_released(hwpid)
-            self._free_spans[host_id].append((start, n_pages))
+            self._release_span(host_id, start, n_pages)
             raise RuntimeError(f"FM rejected grant for host {host_id}")
         self._grants[hwpid] = (host_id, start, n_pages)
         return hwpid, start
@@ -370,27 +416,74 @@ class ShardedFabric:
         self._alloc_cursor[host_id] = cur + n_pages
         return cur
 
+    def _release_span(self, host_id: int, start: int, n_pages: int) -> None:
+        """Return a span to the host's free list: kept sorted by start page,
+        merged with adjacent spans on insert, and — when the topmost free
+        span runs up against the bump cursor — retracted back into the
+        cursor (wilderness coalescing).  The old append-only list never
+        merged anything while `_alloc_span`'s first-fit kept splitting, so
+        mixed-size admit/evict churn fragmented a shard into slivers until
+        `admit` raised "shard exhausted" with most of the shard free."""
+        free = self._free_spans[host_id]
+        free.append((start, n_pages))
+        free.sort()
+        merged: list[tuple[int, int]] = []
+        for s, n in free:
+            if merged and merged[-1][0] + merged[-1][1] == s:
+                merged[-1] = (merged[-1][0], merged[-1][1] + n)
+            else:
+                merged.append((s, n))
+        while merged and \
+                merged[-1][0] + merged[-1][1] == self._alloc_cursor[host_id]:
+            self._alloc_cursor[host_id] = merged.pop()[0]
+        self._free_spans[host_id] = merged
+
+    def free_pages(self, host_id: int) -> int:
+        """Total unallocated pages in the host's shard (free list plus the
+        untouched tail above the bump cursor).  With the coalescing free
+        list, `admit(n)` succeeds whenever a single free span or the cursor
+        tail covers `n` — and after every tenant is evicted the whole shard
+        merges back into the cursor tail."""
+        rt = self.runtimes[host_id]
+        return (rt.page_hi - self._alloc_cursor[host_id]
+                + sum(n for _, n in self._free_spans[host_id]))
+
     def evict(self, host_id: int, hwpid: int) -> None:
         """Revoke every grant of `hwpid`, return it to the deployment pool
-        (one commit / one publish; index-stable tombstones), and recycle
-        its admitted page span onto the host's free list."""
+        (one commit / one publish; index-stable tombstones), recycle its
+        admitted page span onto the host's coalescing free list, and
+        release any shared ranges it pinned resident.  When revocation
+        tombstones exceed `vacuum_tombstone_frac` of table capacity, runs
+        one `vacuum()` maintenance commit."""
         rt = self.runtimes[host_id]
         self.fm.revoke_hwpid(hwpid)
         rt.engine.release_pid(hwpid)
         rt._grant_released(hwpid)
         span = self._grants.pop(hwpid, None)
         if span is not None:
-            self._free_spans[span[0]].append(span[1:])
+            self._release_span(span[0], span[1], span[2])
+        for sh_host, start, n in self._shared_grants.pop(hwpid, ()):
+            self.runtimes[sh_host].remove_resident_range(start, n)
+        frac = self.vacuum_tombstone_frac
+        if frac is not None and \
+                self.fm.tombstone_count() > frac * self.fm.table.capacity:
+            self.fm.vacuum()
+            self.vacuums += 1
 
     def grant_shared(self, start_page: int, n_pages: int, hwpid: int,
                      host_id: int, *, perm: int) -> None:
         """Grant one tenant access to a shared region (e.g. the graph
-        structure) and make that region resident on its host's checker."""
+        structure) and make that region resident on its host's checker.
+        The residency pin is tracked per hwpid and released on `evict` —
+        previously it leaked, so host shards grew monotonically under churn
+        and stale pages stayed extractable after the tenant was gone."""
         label = self.fm.propose(Proposal(
             host_id, hwpid, 0x2000 + hwpid, start_page, n_pages, perm))
         if label is None:
             raise RuntimeError("FM rejected shared grant")
         self.runtimes[host_id].add_resident_range(start_page, n_pages)
+        self._shared_grants.setdefault(hwpid, []).append(
+            (host_id, start_page, n_pages))
 
     # -- BISnp observation ---------------------------------------------------
     def deliver(self, host_id: int, max_events: int | None = None) -> int:
@@ -401,30 +494,50 @@ class ShardedFabric:
         return self.fm.bus.quiesce()
 
     # -- batched cross-host egress -------------------------------------------
-    def fabric_view(self, hwpid_by_host: dict[int, int]) -> FabricView:
-        """Stacked egress operands for {host_id: tenant hwpid}, memoized per
-        (table epoch, assignment) — steady-state steps pay zero derivation,
-        any commit re-resolves once (the fabric-level leg of the epoch
-        story)."""
-        key = (self.fm.table.epoch, tuple(sorted(hwpid_by_host.items())))
+    def fabric_rows(self, hwpid_by_host: dict) -> list[tuple[int, int]]:
+        """Flatten a tenant assignment — ``{host: hwpid}`` or
+        ``{host: [hwpids...]}`` (values may mix) — into the kernel row
+        order: hosts sorted ascending, each host's tenants in listed order,
+        one row per (host, tenant) pair.  Callers align `data`/`ext_addrs`
+        rows with this ordering."""
+        rows: list[tuple[int, int]] = []
+        for h in sorted(hwpid_by_host):
+            pids = hwpid_by_host[h]
+            if isinstance(pids, (int, np.integer)):
+                rows.append((h, int(pids)))
+            else:
+                rows.extend((h, int(p)) for p in pids)
+        return rows
+
+    def fabric_view(self, hwpid_by_host: dict) -> FabricView:
+        """Stacked egress operands for a (possibly multi-tenant) assignment
+        ``{host_id: hwpid | [hwpids...]}``, memoized per (table epoch, row
+        list) — steady-state steps pay zero derivation, any commit
+        re-resolves once (the fabric-level leg of the epoch story).
+        Co-resident tenants share the host's epoch-memoized shard arrays;
+        each row extracts only its own permbits."""
+        rows = self.fabric_rows(hwpid_by_host)
+        key = (self.fm.table.epoch, tuple(rows))
         if self._fabric_view is not None and self._fabric_view_key == key:
+            self.view_reuses += 1
             return self._fabric_view
-        host_ids = sorted(hwpid_by_host)
-        views = [self.runtimes[h].shard_view(hwpid_by_host[h])
-                 for h in host_ids]
+        views = [self.runtimes[h].shard_view(p) for h, p in rows]
         self._fabric_view = stack_views(
-            views, [hwpid_by_host[h] for h in host_ids], host_ids,
+            views, [p for _, p in rows], [h for h, _ in rows],
             epoch=self.fm.table.epoch)
         self._fabric_view_key = key
+        self.view_rebuilds += 1
         return self._fabric_view
 
-    def step_egress(self, data, ext_addrs, hwpid_by_host: dict[int, int],
+    def step_egress(self, data, ext_addrs, hwpid_by_host: dict,
                     *, need: int = 1, key0: int = 0xAB, key1: int = 0xCD):
-        """One fabric step: every host pulls its (B,) batch of tagged words
-        through the fused check⊕decrypt kernel in ONE batched launch.
+        """One fabric step: every (host, tenant) row pulls its (B,) batch of
+        tagged words through the fused check⊕decrypt kernel in ONE batched
+        launch.
 
-        `data` u32[H, B] / `ext_addrs` i32[H, B] are row-aligned with
-        `sorted(hwpid_by_host)`.  Returns (out u32[H, B], fault i32[H, B]).
+        `data` u32[R, B] / `ext_addrs` i32[R, B] are row-aligned with
+        `fabric_rows(hwpid_by_host)` (R rows; a host with T tenants owns T
+        consecutive rows).  Returns (out u32[R, B], fault i32[R, B]).
         """
         from repro.kernels.fabric_egress import fabric_egress_pallas
         view = self.fabric_view(hwpid_by_host)

@@ -229,6 +229,15 @@ class FabricManager:
         self._stage_effect(lambda: self.audit_log.append(
             f"RELEASE hwpid={hwpid} [{start_page},+{n_pages})"))
 
+    def tombstone_count(self) -> int:
+        """Committed entries whose perm words are all zero — revocation
+        tombstones awaiting reclaim by an overlapping insert or `vacuum()`.
+        `ShardedFabric.evict` polls this to schedule maintenance vacuums:
+        churn that re-admits at fresh page offsets never overlaps its old
+        tombstones, so lazy reclaim alone lets them exhaust the table."""
+        t = self.table
+        return int((~t.perms[:t.n].any(axis=1)).sum())
+
     def vacuum(self) -> None:
         """Compact revocation tombstones out of the table (deliberate
         maintenance; shifts entry indices, so the broadcast carries

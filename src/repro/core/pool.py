@@ -52,6 +52,10 @@ class SharedTensorPool:
         self._tensors: dict[str, jax.Array] = {}
         self._next_page = 1  # page 0 reserved (metadata section, Fig. 5)
         self._free: list[tuple[int, int]] = []  # (start, n) released spans
+        # regions whose page span is owned by an external allocator (a
+        # ShardedFabric tenant span): unregister must NOT recycle them into
+        # the pool's own free list
+        self._external: set[str] = set()
 
     def _alloc(self, n_pages: int) -> int:
         """First-fit from the free list (tenant churn reuses released page
@@ -80,13 +84,39 @@ class SharedTensorPool:
         self._tensors[name] = tensor
         return region
 
+    def register_at(self, name: str, tensor: jax.Array, *,
+                    start_page: int) -> Region:
+        """Register a tensor at an externally-allocated page span (a
+        `ShardedFabric` tenant span, so pool regions and fabric grants live
+        at the SAME addresses — one page space, one checker).  The pool
+        records the region for named lookup / `checked_gather` but does not
+        manage the span's lifetime: `unregister` drops the name without
+        touching the pool's free list (the external allocator recycles it)."""
+        if name in self._regions:
+            raise ValueError(f"region {name} exists")
+        rows = tensor.shape[0]
+        row_shape = tuple(tensor.shape[1:])
+        bpr = int(np.prod(row_shape, dtype=np.int64)) * tensor.dtype.itemsize
+        n_pages = max(1, -(-rows * bpr // PAGE_BYTES))
+        region = Region(name, int(start_page), n_pages, row_shape,
+                        np.dtype(tensor.dtype), rows)
+        self._regions[name] = region
+        self._tensors[name] = tensor
+        self._external.add(name)
+        return region
+
     def unregister(self, name: str) -> Region:
         """Release a region: the tensor is dropped and its page span joins
-        the free list (coalescing adjacent spans).  The caller is
-        responsible for revoking outstanding grants FIRST — the pool only
-        manages addresses, the permission table manages access."""
+        the free list (coalescing adjacent spans) — unless the span is
+        externally owned (`register_at`), in which case only the name is
+        dropped.  The caller is responsible for revoking outstanding grants
+        FIRST — the pool only manages addresses, the permission table
+        manages access."""
         region = self._regions.pop(name)
         self._tensors.pop(name, None)
+        if name in self._external:
+            self._external.discard(name)
+            return region
         spans = sorted(self._free + [(region.start_page, region.n_pages)])
         merged: list[tuple[int, int]] = []
         for s, n in spans:

@@ -1,22 +1,29 @@
-"""Pallas kernel: fabric-wide batched egress (check ⊕ decrypt, H hosts).
+"""Pallas kernel: fabric-wide batched egress (check ⊕ decrypt, R rows).
 
 The single-host fused kernel (`checked_memcrypt_view_pallas`) launches once
 per host per step — at the paper's 255-host deployment that is 255 dispatches
 of identical structure.  This kernel batches the whole fabric step into ONE
-``pallas_call`` over a 2-D grid ``(host, super_block)``:
+``pallas_call`` over a 2-D grid ``(row, super_block)``, where a **row is one
+(host, tenant) pair**: a host serving T co-resident tenants contributes T
+consecutive rows that repeat its shard arrays with per-tenant permbits
+(`repro.core.fabric.ShardedFabric.fabric_rows` defines the ordering):
 
-  * each host's resident table shard (see `repro.core.fabric.HostRuntime`)
-    is one row of the stacked ``[H, N]`` entry arrays, so grid step
-    ``(h, j)`` loads host ``h``'s shard into VMEM and evaluates the same
-    adaptive cover search as the single-host kernel (`_cover_search` is
-    shared code);
-  * the tenant HWPID is a *dynamic* per-host operand (``hwpids[h]``) rather
+  * each row carries one host's resident table shard (see
+    `repro.core.fabric.HostRuntime`) in the stacked ``[R, N]`` entry
+    arrays, so grid step ``(h, j)`` loads row ``h``'s shard into VMEM and
+    evaluates the same adaptive cover search as the single-host kernel
+    (`_cover_search` is shared code);
+  * the tenant HWPID is a *dynamic* per-row operand (``hwpids[h]``) rather
     than the single-host kernel's static argument — one compiled kernel
-    serves every host in the fleet, and admitting a tenant with a fresh
-    HWPID does not recompile;
-  * flat-vs-hier selection is *per host*: the wrapper scores every host's
-    batch against that host's shard summary (`summary_candidate_tiles`
-    vectorized over rows) and ships a ``use_hier i32[H]`` operand — a host
+    serves every (host, tenant) pair in the fleet, and admitting a tenant
+    with a fresh HWPID does not recompile;
+  * rows are fully independent: revoking one tenant re-derives only that
+    tenant's permbits rows, and its lanes zero out while a co-resident
+    tenant's rows — same host, same shard arrays — are untouched (pinned
+    bit-exactly by the multi-tenant oracle test in tests/test_fabric.py);
+  * flat-vs-hier selection is *per row*: the wrapper scores every row's
+    batch against that row's shard summary (`summary_candidate_tiles`
+    vectorized over rows) and ships a ``use_hier i32[R]`` operand — a host
     serving uniform traffic runs the flat scan while its neighbor with a
     hot working set keeps the two-level win, in the same launch;
   * each grid step streams SUPER_BLOCKS x BLOCK words (double-buffered
@@ -165,23 +172,24 @@ def fabric_egress_pallas(data, ext_addrs, view, *, need: int,
                          interpret: bool | None = None):
     """Batched multi-host fused egress over a `repro.core.fabric.FabricView`.
 
-    ``data`` u32[H, B] / ``ext_addrs`` i32[H, B]: row ``i`` is the step
-    batch of host ``view.host_ids[i]``, checked against that host's resident
-    shard for tenant ``view.hwpids[i]`` (flat or hierarchical search chosen
-    per host from that host's shard summary) and decrypted with the
-    keystream at flat position ``i * padded_B + lane``.  Returns
-    ``(out u32[H, B], fault i32[H, B])``.
+    ``data`` u32[R, B] / ``ext_addrs`` i32[R, B]: row ``i`` is the step
+    batch of tenant ``view.hwpids[i]`` on host ``view.host_ids[i]``, checked
+    against that host's resident shard (flat or hierarchical search chosen
+    per row from that row's shard summary) and decrypted with the keystream
+    at flat position ``i * padded_B + lane``.  A multi-tenant host owns
+    several consecutive rows (see `ShardedFabric.fabric_rows`).  Returns
+    ``(out u32[R, B], fault i32[R, B])``.
     """
     data = jnp.asarray(data, jnp.uint32)
     ext = jnp.asarray(ext_addrs, jnp.int32)
     if data.ndim != 2 or ext.shape != data.shape:
         raise ValueError(
-            f"expected matching [H, B] operands, got data {data.shape} / "
+            f"expected matching [R, B] operands, got data {data.shape} / "
             f"ext {ext.shape}")
     if data.shape[0] != view.starts.shape[0]:
         raise ValueError(
             f"{data.shape[0]} batch rows vs {view.starts.shape[0]} fabric "
-            "view hosts")
+            "view (host, tenant) rows")
     return _fabric_egress_impl(
         data, ext, view.hwpids, view.starts, view.ends, view.permbits,
         view.tile_min, view.tile_max, need=need, key0=key0, key1=key1,

@@ -1,27 +1,35 @@
-"""Serving launcher: continuous-batching multi-tenant decode with
-Space-Control-guarded KV pages and a live tenant lifecycle.
+"""Serving launcher: continuous-batching multi-tenant decode on the
+sharded fabric — ONE data plane for serving, churn, and the scale bench.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --preset smoke --requests 8 --prompt-len 32 --gen 16
 
-The engine demonstrates the paper's serving-side integration end to end:
+The engine demonstrates the paper's serving-side integration end to end,
+now on the same `ShardedFabric` the 255-host scale bench drives:
 
-  * each tenant's KV cache block is registered as a region of the shared
-    tensor pool (SDM pages) and granted RW only to that tenant's HWPID;
-  * every decode step's KV-page touch set is validated through the
-    epoch-fenced permission cache (`cached_check_access`) before the step
-    commits (egress enforcement) — a fault aborts that tenant's in-flight
-    requests, not the engine and not other tenants;
-  * the engine's PermCache is wired to the FM's BISnp broadcasts
-    (`invalidate_perm_cache`): a committed grant/revoke drops exactly the
-    dirty page ranges, so surviving tenants keep their all-hit fast path
-    across churn;
-  * tenants are admitted and evicted live: eviction releases the KV page
-    span back to the pool free list, revokes the grants in ONE FM
-    transaction (one epoch bump / BISnp), and returns the HWPID;
-  * mid-run revocation (FM BISnp) kills a tenant's decoding at its very
-    next KV-page touch while other tenants continue — the isolation
-    property, live.
+  * each tenant is ADMITTED on a fabric host: `ShardedFabric.admit`
+    allocates its KV page span inside the host's shard (coalescing free
+    list — churn reuses pages without fragmenting), assigns a
+    deployment-unique HWPID, and commits the RW grant; the KV block is
+    registered in the shared tensor pool AT that span (`register_at`), so
+    pool regions and fabric grants name the same pages;
+  * hosts are MULTI-TENANT: several untrusting processes share one
+    `HostRuntime` — one resident shard, one epoch-fenced PermCache, one
+    `hwpid_local` set covering all co-resident tenants;
+  * every decode step's KV-page touch set is validated through
+    `HostRuntime.check` — the identical checked egress path the fabric
+    bench uses — after the host's BISnp queue is drained up to the table
+    epoch (`bus.deliver_until`, the per-step fence close);
+  * with ``fused_egress=True`` the step additionally pulls every active
+    tenant's KV lines through ONE `ShardedFabric.step_egress` launch
+    (one row per (host, tenant) pair) and cross-checks the kernel's
+    fault lanes against the framework verdicts;
+  * eviction flows through `ShardedFabric.evict`: one revocation commit
+    (index-stable tombstones, targeted BISnp), the page span returns to
+    the host's coalescing free list, and the HWPID returns to the pool;
+  * mid-run revocation kills a tenant's decoding at its very next
+    KV-page touch while co-resident tenants on the SAME host keep their
+    all-hit fast path — the isolation property, live.
 
 Batching: the engine interleaves all tenants each `step()` (continuous
 batching at tenant-group granularity): every active tenant decodes one
@@ -40,20 +48,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, smoke_config
-from repro.core import (
-    FAULT_NONE,
-    FabricManager,
-    PERM_RW,
-    Proposal,
-    SharedTensorPool,
-    invalidate_perm_cache,
-    make_hwpid_local,
-    pack_ext_addr,
-)
-from repro.core.checker import cached_check_access_jit, make_perm_cache
+from repro.core import FAULT_NONE, SharedTensorPool, pack_ext_addr
+from repro.core.fabric import ShardedFabric
 from repro.core.table import PAGE_BYTES
-from repro.kernels.memcrypt import checked_memcrypt_view_pallas
-from repro.kernels.permcheck import ShardViewCache, table_shard_view
 from repro.models import registry
 
 
@@ -62,7 +59,6 @@ class Tenant:
     name: str
     hwpid: int
     host_id: int
-    hwpid_local: jax.Array
     queue: list = field(default_factory=list)   # prompt arrays
     done: list = field(default_factory=list)    # (prompt, generated)
     aborted: list = field(default_factory=list)  # prompts killed in flight
@@ -81,93 +77,102 @@ class Tenant:
 
 
 class ServeEngine:
-    """Continuous-batching multi-tenant decode with per-step KV-page
-    permission checks against an epoch-fenced, BISnp-wired PermCache."""
+    """Continuous-batching multi-tenant decode on a `ShardedFabric`:
+    per-step KV-page checks through each host's fenced PermCache, with an
+    optional single-launch fused egress across every (host, tenant) row."""
 
     def __init__(self, cfg, params, *, batch: int, cap: int,
-                 fused_egress: bool = False):
+                 fused_egress: bool = False, n_hosts: int = 4,
+                 sdm_pages: int = 1 << 20, table_capacity: int = 8192):
         self.cfg = cfg
         self.params = params
         self.batch = batch
         self.cap = cap
-        # optional: pull each step's KV lines through the fused Pallas
-        # check⊕decrypt kernel (device-level egress) on top of the cached
-        # framework check; epoch-stamped shard views re-resolve on churn
+        # optional: pull each step's KV lines through the batched fabric
+        # check⊕decrypt kernel (one launch for ALL tenants on all hosts)
+        # on top of the cached framework check
         self.fused_egress = fused_egress
-        self.shard_views = ShardViewCache()
         self.pool = SharedTensorPool()
-        self.fm = FabricManager(sdm_pages=1 << 20, table_capacity=8192)
+        self.fabric = ShardedFabric(sdm_pages, table_capacity,
+                                    n_shards=n_hosts)
+        self.fm = self.fabric.fm
         self.tenants: dict[str, Tenant] = {}
         self._decode = jax.jit(
             lambda p, c, t, pos: registry.decode_step(cfg, p, c, t, pos))
         self.faults = 0
         self.steps = 0
-        self.bisnp_events = 0
-        # the host-side permission cache, kept honest by FM back-invalidates
-        self.permcache = make_perm_cache(epoch=self.fm.epoch)
-        self.fm.on_bisnp(self._on_bisnp)
-        self._table_dev = self.fm.table.to_device()
 
-    # -- BISnp wiring ----------------------------------------------------------
-    def _on_bisnp(self, ev) -> None:
-        """FM back-invalidate: targeted PermCache drop + epoch advance (the
-        device table snapshot is re-exported lazily on next use)."""
-        self.bisnp_events += 1
-        self.permcache = invalidate_perm_cache(
-            self.permcache, ev.start_page, ev.n_pages, ev.epoch,
-            min_shifted_entry=ev.min_entry_idx)
+    # -- observability ---------------------------------------------------------
+    @property
+    def bisnp_events(self) -> int:
+        """Back-invalidates observed across every enrolled host."""
+        return sum(rt.bisnp_seen for rt in self.fabric.runtimes.values())
 
-    def _table(self):
-        if int(self._table_dev.epoch) != self.fm.epoch:
-            self._table_dev = self.fm.table.to_device()
-        return self._table_dev
+    def cache_stats(self) -> dict:
+        """Aggregate PermCache counters over the fabric's hosts."""
+        hits = sum(int(rt.permcache.hits)
+                   for rt in self.fabric.runtimes.values())
+        misses = sum(int(rt.permcache.misses)
+                     for rt in self.fabric.runtimes.values())
+        total = hits + misses
+        return {"hits": hits, "misses": misses,
+                "hit_rate": hits / total if total else 0.0}
+
+    def view_stats(self) -> dict:
+        """Aggregate view-memo counters (kernel-operand derivation): the
+        fabric's stacked-view memo plus each host's per-tenant ShardView
+        cache behind it."""
+        return {
+            "rebuilds": self.fabric.view_rebuilds
+            + sum(rt.views.rebuilds for rt in self.fabric.runtimes.values()),
+            "reuses": self.fabric.view_reuses
+            + sum(rt.views.reuses for rt in self.fabric.runtimes.values()),
+        }
 
     # -- tenancy ---------------------------------------------------------------
     def add_tenant(self, name: str, host_id: int) -> Tenant:
-        """Admission: allocate a KV page span (reusing evicted tenants'
-        pages), grant it RW to a fresh HWPID, and join the serving loop."""
+        """Admission through the fabric: allocate the KV span inside the
+        host's shard (coalescing free list reuses evicted tenants' pages),
+        grant it RW to a fresh deployment-unique HWPID (one commit), and
+        join the serving loop.  Hosts are multi-tenant — admitting onto an
+        occupied host co-locates with its existing tenants."""
         if name in self.tenants:
             raise ValueError(f"tenant {name} already admitted")
-        eng = self.fm.hosts.get(host_id) or self.fm.enroll_host(host_id)
-        hwpid = eng.get_next_pid()
+        if host_id not in self.fabric.runtimes:
+            self.fabric.enroll(host_id)
         kv_bytes = self.batch * self.cap * 64  # page-accounting granularity
         n_pages = max(1, -(-kv_bytes // PAGE_BYTES))
-        region = self.pool.register(
+        hwpid, start = self.fabric.admit(host_id, n_pages,
+                                         base_p=hash(name) & 0xFFFF)
+        self.pool.register_at(
             f"kv:{name}",
-            jnp.zeros((n_pages, PAGE_BYTES // 4), jnp.float32))
-        label = self.fm.propose(Proposal(
-            host_id, hwpid, base_p=hash(name) & 0xFFFF,
-            start_page=region.start_page, n_pages=region.n_pages,
-            perm=PERM_RW))
-        assert label is not None
-        t = Tenant(name, hwpid, host_id, make_hwpid_local([hwpid]),
-                   kv_start_page=region.start_page,
-                   kv_n_pages=region.n_pages)
+            jnp.zeros((n_pages, PAGE_BYTES // 4), jnp.float32),
+            start_page=start)
+        t = Tenant(name, hwpid, host_id,
+                   kv_start_page=start, kv_n_pages=n_pages)
         self.tenants[name] = t
         return t
 
     def evict_tenant(self, name: str) -> Tenant:
-        """Eviction: abort in-flight work, revoke every grant and release
-        the KV span in ONE FM transaction (one epoch bump, one targeted
-        BISnp batch), return pages to the pool free list and the HWPID to
-        the deployment pool."""
+        """Eviction through the fabric: abort in-flight work, revoke every
+        grant in ONE commit (index-stable tombstones, one targeted BISnp
+        batch), recycle the KV span onto the host's coalescing free list,
+        and return the HWPID to the deployment pool."""
         t = self.tenants.pop(name)
         if t.group is not None:
             t.aborted += t.group
             t.group = None
         t.queue.clear()
-        with self.fm.transaction():
-            self.fm.release_range(t.hwpid, t.kv_start_page, t.kv_n_pages)
-            self.fm.revoke_hwpid(t.hwpid)   # belt-and-braces for reuse
+        self.fabric.evict(t.host_id, t.hwpid)
         self.pool.unregister(f"kv:{name}")
-        self.fm.hosts[t.host_id].release_pid(t.hwpid)
         t.revoked = True
         return t
 
     def revoke(self, name: str) -> None:
         """Mid-flight revocation: the FM drops the tenant's grants and
         broadcasts the BISnp; the tenant's next KV-page touch faults and
-        aborts only its requests (they stay admitted, but powerless)."""
+        aborts only its requests (they stay admitted, but powerless) while
+        co-resident tenants on the same host keep serving."""
         self.fm.revoke_hwpid(self.tenants[name].hwpid)
         self.tenants[name].revoked = True
 
@@ -206,6 +211,29 @@ class ServeEngine:
         t.group = None
         t.cache = None
 
+    def _fused_step_egress(self, active: list) -> list:
+        """One batched kernel launch for the whole step: every active
+        (tenant, ext) pair becomes one fabric row (per-(host, tenant) row
+        layout), ragged batches padded with -1 (denied, zeroed).  Returns
+        the per-row fault slices, row-aligned with `active`."""
+        assign: dict[int, list[int]] = {}
+        for t, _ in sorted(active, key=lambda a: a[0].host_id):
+            assign.setdefault(t.host_id, []).append(t.hwpid)
+        order = sorted(active, key=lambda a: a[0].host_id)
+        bmax = max(int(e.shape[0]) for _, e in order)
+        ext = jnp.full((len(order), bmax), -1, jnp.int32)
+        for i, (_, e) in enumerate(order):
+            ext = ext.at[i, :e.shape[0]].set(e)
+        data = jnp.zeros((len(order), bmax), jnp.uint32)
+        _, fault = self.fabric.step_egress(data, ext, assign, need=2)
+        by_tenant = {t.name: (i, int(e.shape[0]))
+                     for i, (t, e) in enumerate(order)}
+        out = []
+        for t, e in active:
+            i, b = by_tenant[t.name]
+            out.append(fault[i, :b])
+        return out
+
     def step(self, *, gen: int, only: str | None = None) -> dict:
         """One engine tick: every tenant with work decodes one token.
 
@@ -213,7 +241,8 @@ class ServeEngine:
         for tenants that made progress this tick.
         """
         results: dict[str, dict] = {}
-        table = self._table()
+        # phase 1: start groups, collect every active tenant's KV touch set
+        active: list[tuple[Tenant, jax.Array]] = []
         for name, t in list(self.tenants.items()):
             if only is not None and name != only:
                 continue
@@ -221,33 +250,38 @@ class ServeEngine:
                 if not t.queue:
                     continue
                 self._start_group(t, gen)
-            # --- Space-Control egress check on this step's KV touch set ---
             pages = self._kv_pages_for_step(t)
             ext = pack_ext_addr(
                 jnp.full(pages.shape, t.hwpid, jnp.int32), pages)
-            chk, self.permcache = cached_check_access_jit(
-                table, t.hwpid_local, ext, jnp.ones(pages.shape, bool),
-                self.permcache)
-            if self.fused_egress:
-                # device-level egress: decrypt-read one word per touched KV
-                # line through the fused check⊕memcrypt kernel; the shard
-                # view re-resolves exactly once per FM epoch bump
-                view = table_shard_view(table, t.hwpid,
-                                        cache=self.shard_views)
-                words = jnp.zeros(pages.shape, jnp.uint32)
-                _, kfault = checked_memcrypt_view_pallas(
-                    words, ext, view, hwpid=t.hwpid, need=2,
-                    key0=0xAB, key1=0xCD)
+            active.append((t, ext))
+        if not active:
+            return results
+        # phase 2: close each involved host's BISnp fence up to the table
+        # epoch it is about to check against (no fabric-wide quiesce)
+        for host_id in {t.host_id for t, _ in active}:
+            self.fm.bus.deliver_until(host_id, self.fm.epoch)
+        # phase 3: framework egress check per tenant, through the host's
+        # fenced PermCache and resident shard (THE checked egress path)
+        checks = [self.fabric.runtimes[t.host_id].check(
+            ext, jnp.ones(ext.shape, bool)) for t, ext in active]
+        if self.fused_egress:
+            # device-level egress: one batched launch for all tenants; the
+            # kernel's fault lanes must agree with the framework verdicts
+            for (t, _), chk, kfault in zip(
+                    active, checks, self._fused_step_egress(active)):
                 if not bool(jnp.all((kfault > 0) == ~chk.allowed)):
                     raise AssertionError(
-                        "fused kernel and cached checker disagree")
+                        "fused kernel and cached checker disagree for "
+                        f"tenant {t.name}")
+        # phase 4: enforce verdicts, decode survivors
+        for (t, _), chk in zip(active, checks):
             if not bool(chk.allowed.all()):
                 # response-side enforcement: the denied KV lines read as
                 # zero and the tenant's in-flight group aborts
                 fault = int(np.asarray(chk.fault).max())
                 self._abort_group(t, fault)
-                results[name] = {"aborted": True, "fault": fault,
-                                 "retired": 0}
+                results[t.name] = {"aborted": True, "fault": fault,
+                                   "retired": 0}
                 continue
             logits, t.cache = self._decode(
                 self.params, t.cache, t.cur,
@@ -266,8 +300,8 @@ class ServeEngine:
                 retired = len(t.group)
                 t.group = None
                 t.cache = None
-            results[name] = {"aborted": False, "fault": FAULT_NONE,
-                             "retired": retired}
+            results[t.name] = {"aborted": False, "fault": FAULT_NONE,
+                               "retired": retired}
         return results
 
     def has_work(self, only: str | None = None) -> bool:
@@ -319,8 +353,9 @@ def main() -> None:
                          cap=args.prompt_len + args.gen)
 
     rng = np.random.default_rng(0)
+    # co-resident tenants: a and b share host 0 (multi-tenant data plane)
     engine.add_tenant("tenant-a", host_id=0)
-    engine.add_tenant("tenant-b", host_id=1)
+    engine.add_tenant("tenant-b", host_id=0)
     for i in range(args.requests):
         who = "tenant-a" if i % 2 == 0 else "tenant-b"
         engine.submit(who, rng.integers(3, cfg.vocab - 1, args.prompt_len))
@@ -330,16 +365,22 @@ def main() -> None:
     dt = time.time() - t0
     print(f"continuous run: {res}")
     tok = engine.steps * args.batch
+    cs = engine.cache_stats()
     print(f"{engine.steps} decode steps, ~{tok/dt:,.0f} tok/s, "
           f"faults={engine.faults}, bisnp={engine.bisnp_events}, "
-          f"perm-cache hit rate {engine.permcache.hit_rate:.2f}")
+          f"perm-cache hit rate {cs['hit_rate']:.2f}")
 
-    # live revocation: tenant-a loses access mid-service
+    # live revocation: tenant-a loses access mid-service while its
+    # co-resident neighbor on the same host keeps serving
     engine.submit("tenant-a", rng.integers(3, cfg.vocab - 1, args.prompt_len))
+    engine.submit("tenant-b", rng.integers(3, cfg.vocab - 1, args.prompt_len))
     engine.revoke("tenant-a")
     ra2 = engine.run_tenant("tenant-a", args.gen)
     assert ra2["aborted"], "revoked tenant must fault at the KV egress check"
-    print(f"after revocation: {ra2} (isolation enforced)")
+    rb2 = engine.run_tenant("tenant-b", args.gen)
+    assert not rb2["aborted"], "co-resident tenant must keep serving"
+    print(f"after revocation: {ra2} (isolation enforced; "
+          f"co-resident {rb2['tenant']} served {rb2['served']})")
 
     # churn: evict the revoked tenant, admit a replacement reusing its pages
     evicted = engine.evict_tenant("tenant-a")

@@ -114,9 +114,12 @@ def _check_against_oracle(grants, accesses, local_set):
         assert bool(r.allowed[i]) == expect, (hwpid, page, write, perm)
 
 
+@pytest.mark.slow
 def test_checker_matches_naive_oracle_seeded():
     """Seeded sweep of the oracle property (runs with or without
-    hypothesis): random overlapping grants, random accesses."""
+    hypothesis): random overlapping grants, random accesses.  Slow-marked
+    (25 rounds recompile the jit checker): the --run-slow CI job keeps it;
+    the targeted fault-semantics tests above stay in tier-1."""
     rng = np.random.default_rng(7)
     perms = [PERM_R, PERM_W, PERM_RW]
     for _ in range(25):

@@ -136,13 +136,13 @@ def test_broadcast_isolates_listener_failures():
 # ---------------------------------------------------------------------------
 
 def _host_consumer(holder):
-    """The HostRuntime BISnp policy (index-shifting commits flush index
-    mappings; index-stable commits stay targeted), as a cache updater."""
+    """The HostRuntime BISnp policy (the event's min_entry_idx forwarded
+    verbatim as the index-drop threshold; page ranges targeted), as a
+    cache updater."""
     def on_ev(ev):
-        min_shifted = None if ev.min_entry_idx is None else 0
         holder["cache"] = invalidate_perm_cache(
             holder["cache"], ev.start_page, ev.n_pages, ev.epoch,
-            min_shifted_entry=min_shifted)
+            min_shifted_entry=ev.min_entry_idx)
     return on_ev
 
 
@@ -414,6 +414,184 @@ def test_admit_evict_churn_never_exhausts_the_shard():
         pid, start = fab.admit(0, 64)
         assert start == start0       # the freed span is reused first-fit
     fab.quiesce()
+
+
+def test_mixed_size_churn_does_not_fragment_free_spans():
+    """Regression (free-span fragmentation): `evict` used to append spans
+    to the free list raw while `_alloc_span`'s first-fit kept splitting
+    them, so mixed-size churn shredded a shard into slivers until `admit`
+    raised "shard exhausted" with every page free.  With sorted-insert
+    coalescing (plus bump-cursor retraction), evicting everything merges
+    the shard back into one hole and a full-shard admit succeeds whenever
+    total free pages suffice."""
+    fab = ShardedFabric(sdm_pages=1 << 10, table_capacity=256, n_shards=4)
+    # aggressive maintenance threshold so this churn volume also exercises
+    # the auto-vacuum path (default 0.25 is sized for long-lived fabrics)
+    fab.vacuum_tombstone_frac = 0.02
+    fab.enroll(0)
+    lo, hi = fab.shard_range(0)
+    shard = hi - lo
+    rng = np.random.default_rng(7)
+    live: list[int] = []
+
+    def max_hole() -> int:
+        # largest single allocatable hole: biggest free span or cursor tail
+        tail = hi - fab._alloc_cursor[0]
+        return max([n for _, n in fab._free_spans[0]] + [tail])
+
+    for round_ in range(12):
+        # mixed-size admits until the shard is mostly full (each admit
+        # sized to fit SOME hole — interleaved live tenants legitimately
+        # cap the largest contiguous allocation)
+        while True:
+            fit = [s for s in (8, 16, 32) if s <= max_hole()]
+            if not fit:
+                break
+            pid, _ = fab.admit(0, int(rng.choice(fit)))
+            live.append(pid)
+        # evict a random half (creates interior holes of mixed sizes)
+        rng.shuffle(live)
+        for pid in live[len(live) // 2:]:
+            fab.evict(0, pid)
+        del live[len(live) // 2:]
+        # free space is conserved exactly (no pages leak to fragmentation)
+        used = sum(fab._grants[p][2] for p in live)
+        assert fab.free_pages(0) == shard - used
+        # every 3rd round: drain completely — the whole shard must merge
+        # back into one allocatable hole (this is the pre-fix failure)
+        if round_ % 3 == 2:
+            for pid in live:
+                fab.evict(0, pid)
+            live.clear()
+            assert fab.free_pages(0) == shard
+            pid, start = fab.admit(0, shard)   # raised pre-fix
+            assert start == lo
+            fab.evict(0, pid)
+    fab.quiesce()
+    # churn-long table hygiene: tombstones were vacuumed, not accumulated
+    assert fab.vacuums >= 1
+    assert fab.fm.tombstone_count() <= 0.5 * fab.fm.table.capacity
+
+
+def test_tail_insert_keeps_unshifted_cached_mappings():
+    """Regression (wholesale index-map flush): `on_bisnp` used to clamp
+    `min_shifted = 0` whenever the event carried ANY `min_entry_idx`, so a
+    tail insert — admitting a tenant whose pages sort after every existing
+    entry — invalidated every cached index mapping on every host.  The
+    event's actual index is now forwarded: a warmed host whose shard lies
+    entirely below the insertion point keeps its mappings and stays
+    all-hit."""
+    fab, rts, tenants = _mk_fabric()
+    pid0, start0 = tenants[0]
+    ext = pack_ext_addr(np.full(16, pid0, np.int32),
+                        (start0 + np.arange(16)).astype(np.int32))
+    # warm host 0 (miss pass, then confirm the all-hit fast path)
+    assert bool(rts[0].check(ext, jnp.zeros(16, bool)).allowed.all())
+    fab.quiesce()
+    assert bool(rts[0].check(ext, jnp.zeros(16, bool)).allowed.all())
+    # tail insert: a second tenant on the highest shard sorts after every
+    # committed entry, so min_entry_idx == old table count > host 0's ranks
+    n_before = int(fab.fm.table.n)
+    fab.admit(3, 8)
+    fab.quiesce()
+    assert fab.fm.table.last_commit.min_shifted_entry is not None
+    assert fab.fm.table.last_commit.min_shifted_entry >= n_before
+    # host 0's cached mappings survived: fence closed, zero misses burned
+    hits0 = int(rts[0].permcache.hits)
+    res = rts[0].check(ext, jnp.zeros(16, bool))
+    assert bool(res.allowed.all())
+    assert int(rts[0].permcache.hits) - hits0 == 16, \
+        "tail insert flushed host 0's cached index mappings"
+    assert int(rts[0].permcache.epoch) == fab.fm.epoch
+
+
+def test_evict_releases_shared_residency():
+    """Regression (shared-range residency leak): `grant_shared` pinned the
+    region resident via `add_resident_range` but `evict` never released
+    it, so host shards grew monotonically under churn and an evicted
+    tenant's shared pages stayed extractable.  Residency pins are now
+    occurrence-counted per hwpid and released on evict."""
+    fab, rts, tenants = _mk_fabric()
+    pid1, _ = tenants[1]
+    pid2, _ = fab.admit(1, 8)       # co-resident second tenant on host 1
+    fab.quiesce()
+    shared_lo, shared_n = 8, 16     # lives in host 0's partition
+    entries0 = rts[1].shard_entries()
+    fab.grant_shared(shared_lo, shared_n, pid1, 1, perm=PERM_R)
+    fab.grant_shared(shared_lo, shared_n, pid2, 1, perm=PERM_R)
+    fab.quiesce()
+    span = (shared_lo, shared_lo + shared_n)
+    assert rts[1].resident_ranges().count(span) == 2
+    assert rts[1].shard_entries() > entries0
+    # evicting ONE sharer releases one pin; the other's residency (and
+    # access) is untouched
+    fab.evict(1, pid1)
+    fab.quiesce()
+    assert rts[1].resident_ranges().count(span) == 1
+    ext = pack_ext_addr(np.full(8, pid2, np.int32),
+                        (shared_lo + np.arange(8)).astype(np.int32))
+    assert bool(rts[1].check(ext, jnp.zeros(8, bool)).allowed.all())
+    # evicting the last sharer drops the pin: the region's entries are no
+    # longer resident — stale pages cannot be extracted from this host
+    fab.evict(1, pid2)
+    fab.quiesce()
+    assert rts[1].resident_ranges().count(span) == 0
+    s, e, _ = rts[1]._resident_entries()
+    lo1, hi1 = fab.shard_range(1)
+    assert all(int(x) >= lo1 for x in s), \
+        "evicted tenant's shared pages are still extractable"
+    assert rts[1].shard_entries() <= entries0
+
+
+def test_multi_tenant_rows_match_oracle_and_isolate_revocation():
+    """Multi-tenant hosts in the batched kernel: two co-resident tenants on
+    one host occupy two rows sharing the host's shard arrays with their own
+    permbits.  Every row — including denied lanes (forged tag, out-of-span
+    page) — is bit-exact vs the reference oracle, and revoking one tenant
+    mid-step zeroes exactly its rows while the co-resident tenant's output
+    is bit-identical to the pre-revocation step."""
+    rng = np.random.default_rng(3)
+    fab = ShardedFabric(sdm_pages=1 << 14, table_capacity=2048, n_shards=4)
+    rts = {h: fab.enroll(h) for h in range(4)}
+    t00, s00 = fab.admit(0, 48)
+    t01, s01 = fab.admit(0, 48)      # co-resident with t00 on host 0
+    t10, s10 = fab.admit(1, 48)
+    fab.quiesce()
+    assign = {0: [t00, t01], 1: [t10]}
+    rows = fab.fabric_rows(assign)
+    assert rows == [(0, t00), (0, t01), (1, t10)]
+    spans = {t00: s00, t01: s01, t10: s10}
+    b = 256
+    data = rng.integers(0, 1 << 32, (len(rows), b), dtype=np.uint32)
+    ext = np.zeros((len(rows), b), np.int32)
+    for i, (h, pid) in enumerate(rows):
+        pages = spans[pid] + rng.integers(-8, 56, b)  # some denied lanes
+        tags = np.full(b, pid, np.int32)
+        tags[::19] = 0                                # untagged lanes
+        ext[i] = np.asarray(pack_ext_addr(tags, pages.astype(np.int32)))
+    out, fault = fab.step_egress(data, ext, assign, need=1)
+    view = fab.fabric_view(assign)
+    bp = bucket_pad(b, BLOCK)
+    for i, (h, pid) in enumerate(rows):
+        o_ref, f_ref = ref.checked_memcrypt(
+            data[i], ext[i], view.starts[i], view.ends[i], view.permbits[i],
+            hwpid=pid, need=1, key0=0xAB, key1=0xCD, base_word=i * bp)
+        np.testing.assert_array_equal(np.asarray(out[i]), np.asarray(o_ref))
+        np.testing.assert_array_equal(np.asarray(fault[i]),
+                                      np.asarray(f_ref))
+    # mid-step revocation of t00: its row reads all-zero with faults on
+    # every lane; t01 — same host, same shard row — is bit-identical
+    fab.fm.revoke_hwpid(t00)
+    fab.quiesce()
+    out2, fault2 = fab.step_egress(data, ext, assign, need=1)
+    assert bool(jnp.all(out2[0] == 0)) and bool(jnp.all(fault2[0] > 0))
+    np.testing.assert_array_equal(np.asarray(out2[1]), np.asarray(out[1]))
+    np.testing.assert_array_equal(np.asarray(fault2[1]),
+                                  np.asarray(fault[1]))
+    np.testing.assert_array_equal(np.asarray(out2[2]), np.asarray(out[2]))
+    # and the framework checker agrees lane-for-lane on the revoked row
+    chk = rts[0].check(jnp.asarray(ext[0]), jnp.zeros(b, bool))
+    assert not bool(chk.allowed.any())
 
 
 def test_shard_range_partition_covers_sdm():

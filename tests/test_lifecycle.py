@@ -57,13 +57,15 @@ def test_join_leave_revoke_under_load(engine_factory):
     assert len(engine.tenants["b"].aborted) > 0
 
     # targeted invalidation: a's next check is all-hit (no probes burned)
-    hits0 = int(engine.permcache.hits)
+    # on its host's PermCache — b's revoke touched only b's page ranges
+    rt0 = engine.fabric.runtimes[0]
+    hits0 = int(rt0.permcache.hits)
     ta = engine.tenants["a"]
     lanes = len(ta.group) if ta.group is not None \
         else min(engine.batch, len(ta.queue))
     res = engine.step(gen=4, only="a")
     assert not res["a"]["aborted"]
-    assert int(engine.permcache.hits) - hits0 == lanes, \
+    assert int(rt0.permcache.hits) - hits0 == lanes, \
         "b's revoke dropped a's cached mappings (not targeted)"
 
     # drain: a and c retire everything, b retires nothing more
@@ -75,8 +77,10 @@ def test_join_leave_revoke_under_load(engine_factory):
     for _, generated in engine.tenants["a"].done:
         assert len(generated) == 4
 
-    # epoch fence is closed at quiescence
-    assert int(engine.permcache.epoch) == engine.fm.epoch
+    # epoch fence is closed at quiescence, on every enrolled host
+    engine.fabric.quiesce()
+    for rt in engine.fabric.runtimes.values():
+        assert int(rt.permcache.epoch) == engine.fm.epoch
     assert engine.bisnp_events > 0
 
 
@@ -139,16 +143,68 @@ def test_fused_egress_path_tracks_epochs(engine_factory):
     _prompts(engine, rng, "b", 1)
     engine.run(gen=3, max_steps=50)
     assert len(engine.tenants["a"].done) == 1
-    rebuilds0 = engine.shard_views.rebuilds
-    assert engine.shard_views.reuses > 0, "views were not reused at epoch"
+    vs0 = engine.view_stats()
+    assert vs0["reuses"] > 0, "views were not reused at epoch"
     # revocation bumps the epoch: views re-resolve, kernel faults b
     engine.revoke("b")
     _prompts(engine, rng, "b", 1)
     r = engine.run_tenant("b", gen=3)
     assert r["aborted"] and r["fault"] > 0
-    assert engine.shard_views.rebuilds > rebuilds0
+    assert engine.view_stats()["rebuilds"] > vs0["rebuilds"]
     _prompts(engine, rng, "a", 1)
     assert not engine.run_tenant("a", gen=3)["aborted"]
+
+
+def test_multi_tenant_host_revocation_isolates_coresidents(engine_factory):
+    """Four untrusting tenants co-resident on ONE fabric host, fused egress
+    on (each step also flows through the batched per-(host, tenant)-row
+    kernel): revoking one mid-flight aborts only it, and the survivors'
+    very next checks stay on the shared host PermCache's all-hit fast path
+    — the revoke's targeted BISnp dropped only the victim's page ranges."""
+    rng = np.random.default_rng(5)
+    engine = engine_factory(fused_egress=True)
+    names = [f"mt{i}" for i in range(4)]
+    for n in names:
+        engine.add_tenant(n, host_id=0)
+        _prompts(engine, rng, n, 1)
+    assert len(engine.fabric.runtimes) == 1, "all four share one host"
+    assert len({engine.tenants[n].hwpid for n in names}) == 4
+    spans = [(engine.tenants[n].kv_start_page, engine.tenants[n].kv_n_pages)
+             for n in names]
+    for (s1, n1), (s2, n2) in zip(spans, spans[1:]):
+        assert s1 + n1 <= s2, "co-resident KV spans must not overlap"
+
+    # warm every tenant onto the fast path (prefill + one decode each)
+    for _ in range(2):
+        engine.step(gen=4)
+    victim = names[1]
+    survivors = [n for n in names if n != victim]
+    assert engine.tenants[victim].group is not None, "victim is in flight"
+    engine.revoke(victim)
+    res = engine.step(gen=4)
+    assert res[victim]["aborted"] and res[victim]["fault"] > 0
+    for n in survivors:
+        assert not res[n]["aborted"]
+
+    # survivors' next step is all-hit on the SHARED cache: no misses, one
+    # hit per active lane
+    rt0 = engine.fabric.runtimes[0]
+    hits0, misses0 = int(rt0.permcache.hits), int(rt0.permcache.misses)
+    lanes = sum(len(engine.tenants[n].group) for n in survivors)
+    res = engine.step(gen=4)
+    assert int(rt0.permcache.misses) == misses0, \
+        "revoking one tenant burned a co-resident's cached mappings"
+    assert int(rt0.permcache.hits) - hits0 == lanes
+    for n in survivors:
+        assert not res[n]["aborted"]
+
+    # drain: every survivor retires its request, the victim retires none
+    engine.run(gen=4, max_steps=100)
+    for n in survivors:
+        assert len(engine.tenants[n].done) == 1
+        assert not engine.tenants[n].aborted
+    assert not engine.tenants[victim].done
+    assert len(engine.tenants[victim].aborted) == 1
 
 
 @pytest.mark.slow
@@ -159,7 +215,7 @@ def test_sustained_churn_rounds(engine_factory):
     rng = np.random.default_rng(3)
     engine = engine_factory()
     engine.add_tenant("keeper", host_id=0)
-    peak_pages = None
+    free_after_evict = None
     for round_ in range(6):
         name = f"t{round_}"
         engine.add_tenant(name, host_id=1)
@@ -172,10 +228,13 @@ def test_sustained_churn_rounds(engine_factory):
             _prompts(engine, rng, name, 1, plen=8)
             assert engine.run_tenant(name, gen=3)["aborted"]
         engine.evict_tenant(name)
-        if peak_pages is None:
-            peak_pages = engine.pool.total_pages
-        assert int(engine.permcache.epoch) == engine.fm.epoch
-    # page space does not leak across rounds (free-list reuse)
-    assert engine.pool.total_pages == peak_pages
+        # host 1's shard returns to the same free-page count every round:
+        # eviction coalesces the span back instead of fragmenting
+        if free_after_evict is None:
+            free_after_evict = engine.fabric.free_pages(1)
+        assert engine.fabric.free_pages(1) == free_after_evict
+        engine.fabric.quiesce()
+        for rt in engine.fabric.runtimes.values():
+            assert int(rt.permcache.epoch) == engine.fm.epoch
     assert len(engine.tenants["keeper"].done) == 6
     assert not engine.tenants["keeper"].aborted
