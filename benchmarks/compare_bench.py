@@ -45,6 +45,16 @@ With ``--scale BENCH_scale.json`` the fabric-scale record is gated too
   * revoking one co-resident tenant zeroes exactly its kernel rows
     (``multi_tenant.revocation_zeroes_only_victim``).
 
+With ``--timing BENCH_timing.json`` the clocked-fabric timing record is
+gated (floors only; the replay is deterministic so these are exact):
+
+  * the 16 KiB PermCache keeps the egress bandwidth tax in [0, 10] % and
+    strictly below the no-cache tax (paper Fig. 13: 3.3 % vs lookup-
+    dominated);
+  * commit-propagation p99 at the largest sweep point stays <= 200 us
+    (255 copies through one FM egress port at Table 2 rates is ~128 us);
+  * a critical-path bottleneck link is identified.
+
 Missing metrics fail loudly (a bench silently dropping out of the JSON is
 itself a regression).  Exit status: 0 clean, 1 regression/missing.
 """
@@ -113,6 +123,28 @@ SCALE_FLOORS = [
 ]
 
 
+# floors applied to the clocked-fabric timing record (`--timing`,
+# BENCH_timing.json): the PermCache must keep the egress bandwidth tax in
+# low single digits (paper: 3.3 % at 16 KiB) and far below the no-cache
+# tax, and the commit-propagation tail at the largest sweep point must stay
+# bounded (255 copies through one FM egress port: ~128 us at Table 2 rates;
+# the 200 us ceiling flags a topology/contention regression, not noise —
+# the replay is deterministic)
+TIMING_FLOORS = [
+    ("timing_penalty_16k_max",
+     lambda r: float(r["headline"]["timing_penalty_16k_pct"]), 10.0, "<="),
+    ("timing_penalty_16k_min",
+     lambda r: float(r["headline"]["timing_penalty_16k_pct"]), 0.0, ">="),
+    ("timing_cached_beats_nocache",
+     lambda r: float(r["headline"]["timing_penalty_nocache_pct"]
+                     - r["headline"]["timing_penalty_16k_pct"]), 0.0, ">="),
+    ("timing_prop_p99_ns_max",
+     lambda r: float(r["headline"]["prop_p99_ns"]), 200_000.0, "<="),
+    ("timing_has_critical_link",
+     lambda r: float(r["headline"]["critical_link"] is not None), 1.0, ">="),
+]
+
+
 def check_floors(rec: dict, floors: list) -> list:
     """Apply (name, extractor, bound, direction) floors to one record."""
     out = []
@@ -153,11 +185,13 @@ def main() -> None:
                     help="freshly produced kernels JSON to validate")
     ap.add_argument("--scale", default=None,
                     help="fabric-scale JSON (BENCH_scale.json) to gate")
+    ap.add_argument("--timing", default=None,
+                    help="clocked-fabric JSON (BENCH_timing.json) to gate")
     ap.add_argument("--max-regression", type=float, default=0.25,
                     help="tolerated fractional drop (default 25%%)")
     args = ap.parse_args()
-    if args.fresh is None and args.scale is None:
-        ap.error("nothing to gate: pass --fresh and/or --scale")
+    if args.fresh is None and args.scale is None and args.timing is None:
+        ap.error("nothing to gate: pass --fresh, --scale and/or --timing")
 
     rows = []
     if args.fresh is not None:
@@ -169,6 +203,9 @@ def main() -> None:
     if args.scale is not None:
         with open(args.scale) as f:
             rows += check_floors(json.load(f), SCALE_FLOORS)
+    if args.timing is not None:
+        with open(args.timing) as f:
+            rows += check_floors(json.load(f), TIMING_FLOORS)
     failed = False
     print(f"{'metric':36s} {'bound':>9s} {'fresh':>9s}  verdict")
     for name, base, new, ok in rows:

@@ -43,6 +43,10 @@ import numpy as np
 
 SDM_PAGES = 1 << 18          # 1 GiB SDM @ 4 KiB pages
 PAGES_PER_PROC = 32          # each tenant's span inside its host's shard
+TIMING_PAGES_PER_PROC = 1024  # timing rows: 4 MiB spans so the 16 KiB
+                              # PermCache (256 entries) sees a real working
+                              # set — 32-page spans fit entirely and the
+                              # measured bandwidth tax degenerates to ~0
 STORAGE_GATE = 0.02          # acceptance: overhead fraction <= 2 %
 MT_CHURN_GATE = 1.5          # multi-tenant churn step <= 1.5x static
 
@@ -237,6 +241,77 @@ def _bench_multi_tenant(n_hosts: int, n_procs: int, *, steps: int,
     }
 
 
+def _bench_timing(n_hosts: int, n_procs: int, *, steps: int, batch: int,
+                  traces, seed: int) -> dict:
+    """Clocked-fabric timing row: build the deployment on a `ClockedFabric`
+    (BISnp delivery advances simulated time), record a `FabricTrace` of the
+    commits + egress steps, and replay it through the link cost model —
+    commit-propagation percentiles, per-link utilization, the critical
+    path, and the PermCache bandwidth tax (`docs/timing_model.md`)."""
+    from repro.core import ShardedFabric
+    from repro.memsim.clock import ClockedFabric, TimingConfig
+    from repro.memsim.replay import replay, timing_penalty
+    from repro.workloads import gapbs
+
+    cfg = TimingConfig()
+    cf = ClockedFabric(cfg, seed=seed)
+    fab = ShardedFabric(SDM_PAGES, table_capacity=8192, n_shards=n_hosts,
+                        clock=cf)
+    for h in range(n_hosts):
+        fab.enroll(h)
+    active = _tenant_hosts(n_hosts, n_procs)
+    fab.begin_trace(label=f"hosts={n_hosts}")
+    tenants = {h: fab.admit(h, TIMING_PAGES_PER_PROC) for h in active}
+    fab.quiesce()                       # clocked: advances simulated time
+
+    hwpid_by_host = {h: tenants[h][0] for h in active}
+    names = list(traces)
+    ext_steps = []
+    for i, h in enumerate(active):
+        pid, start = tenants[h]
+        tr = traces[names[i % len(names)]]
+        ext, _ = gapbs.egress_batches(tr, hwpid=pid, batch=batch,
+                                      n_steps=steps, page_offset=start,
+                                      page_span=TIMING_PAGES_PER_PROC)
+        ext_steps.append(ext)
+    ext_steps = np.stack(ext_steps, axis=0)
+
+    rng = np.random.default_rng(seed)
+    victim = active[0]
+    for s in range(steps):
+        ext = ext_steps[:, s]
+        data = rng.integers(0, 1 << 32, ext.shape, dtype=np.uint32)
+        fab.step_egress(data, ext, hwpid_by_host, need=1)
+        if s % 2 == 1:                  # interleave churn commits
+            pid, _ = tenants[victim]
+            fab.evict(victim, pid)
+            tenants[victim] = fab.admit(victim, TIMING_PAGES_PER_PROC)
+            hwpid_by_host[victim] = tenants[victim][0]
+            fab.quiesce()
+    fab.quiesce()
+    trace = fab.end_trace()
+
+    live = fab.fm.bus.propagation_cycles()
+    rep = replay(trace, cfg, seed=seed)
+    pen = timing_penalty(trace, cfg)
+    live_arr = np.asarray(live, np.int64) if live else np.zeros(1, np.int64)
+    return {
+        "hosts": n_hosts,
+        "procs": n_procs,
+        "events": trace.n_events,
+        "commits": trace.n_commits,
+        "clock_cycles": cf.now,
+        "live_prop_p99_ns": round(
+            float(np.percentile(live_arr, 99)) / cfg.clock_ghz, 1),
+        "propagation": rep.propagation,
+        "links": rep.links,
+        "critical_path": rep.critical_path,
+        "replay_cycles": rep.cycles,
+        "egress_packets": rep.egress_packets,
+        **pen,
+    }
+
+
 def _bench_cache_penalty(n_hosts: int, *, trace, sdm_pages: int) -> dict:
     """Paper Fig. 13 analogue at fabric scale: CPI overhead vs the
     checks-free cxl baseline with the 16 KiB permission cache vs without."""
@@ -336,6 +411,76 @@ def run_sweep(*, smoke: bool, hosts: list[int], max_procs: int = 127,
     }
 
 
+def run_timing_sweep(*, smoke: bool, hosts: list[int], max_procs: int = 127,
+                     steps: int | None = None, batch: int | None = None,
+                     seed: int = 0) -> dict:
+    """Clocked-fabric timing sweep -> the ``BENCH_timing.json`` record:
+    per-host-count commit-propagation percentiles, critical path, and the
+    16 KiB PermCache bandwidth tax (measured analogue of the paper's
+    3.3 % figure).  Gated: the cached penalty must beat no-cache and the
+    propagation tail must stay bounded at the largest sweep point."""
+    from repro.memsim.clock import TimingConfig
+    from repro.workloads import gapbs
+    from repro.workloads.graphs import make_graph
+
+    steps = steps if steps is not None else (4 if smoke else 6)
+    batch = batch if batch is not None else (256 if smoke else 512)
+    cap = 20_000 if smoke else 100_000
+    g = make_graph(scale=10 if smoke else 13, avg_degree=12, seed=7)
+    traces = {k: gapbs.TRACES[k](g, cap=cap, seed=seed)
+              for k in ["pr", "bfs", "bc", "tc"]}
+
+    rows = {}
+    for h in sorted(set(hosts)):
+        n_procs = min(h, max_procs)
+        t0 = time.time()
+        row = _bench_timing(h, n_procs, steps=steps, batch=batch,
+                            traces=traces, seed=seed)
+        rows[str(h)] = row
+        print(f"timing hosts={h}: {time.time() - t0:.1f}s  "
+              f"prop p99={row['propagation'].get('p99_ns')}ns "
+              f"(max {row['propagation'].get('max_ns')}ns), "
+              f"bottleneck={row['critical_path']['link']}, "
+              f"penalty 16KiB={row['penalty_cached_pct']}% "
+              f"(no cache {row['penalty_nocache_pct']}%)", flush=True)
+
+    top = rows[str(max(hosts))]
+    cfg = TimingConfig()
+    return {
+        "bench": "timing",
+        "smoke": smoke,
+        "config": {"clock_ghz": cfg.clock_ghz,
+                   "link_latency_cycles": cfg.link_latency,
+                   "fm_egress_gbps": cfg.fm_egress_gbps,
+                   "downlink_gbps": cfg.downlink_gbps,
+                   "device_gbps": cfg.device_gbps,
+                   "packet_bytes": cfg.packet_bytes},
+        "rows": rows,
+        "headline": {
+            "hosts": top["hosts"],
+            "procs": top["procs"],
+            "prop_p50_ns": top["propagation"].get("p50_ns"),
+            "prop_p99_ns": top["propagation"].get("p99_ns"),
+            "prop_max_ns": top["propagation"].get("max_ns"),
+            "critical_link": top["critical_path"]["link"],
+            "critical_host": top["critical_path"]["host"],
+            "timing_penalty_16k_pct": top["penalty_cached_pct"],
+            "timing_penalty_nocache_pct": top["penalty_nocache_pct"],
+        },
+        "gates": {
+            "penalty_cached_lt_nocache": bool(
+                top["penalty_cached_pct"] < top["penalty_nocache_pct"]),
+            "penalty_cached_le_10pct": bool(
+                top["penalty_cached_pct"] <= 10.0),
+        },
+        "paper_claim": {"cache_penalty_16KiB_pct": 3.3,
+                        "bisnp": "revocation costs one BISnp round (7.1.7)"},
+        "note": "clocked star fabric (Table 2 @ 4 GHz): FM egress port -> "
+                "per-host downlinks, shared SDM device port; replayed from "
+                "a recorded FabricTrace (docs/timing_model.md)",
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -347,28 +492,54 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--batch", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--timing-out", default="BENCH_timing.json",
+                    help="clocked-fabric timing record output path")
+    ap.add_argument("--timing-only", action="store_true",
+                    help="run only the clocked timing sweep (CI timing leg)")
+    ap.add_argument("--no-timing", action="store_true",
+                    help="skip the clocked timing sweep")
     args = ap.parse_args()
 
     hosts = [int(h) for h in args.hosts.split(",") if h]
     if any(not (1 <= h <= 255) for h in hosts):
         raise SystemExit("host counts must be in [1, 255]")
-    rec = run_sweep(smoke=args.smoke, hosts=hosts, max_procs=args.max_procs,
-                    steps=args.steps, batch=args.batch, seed=args.seed)
-    with open(args.out, "w") as f:
-        json.dump(rec, f, indent=1, default=float)
-    hl = rec["headline"]
-    print(f"wrote {args.out}")
-    print(f"  {hl['hosts']} hosts / {hl['procs']} procs: "
-          f"storage {hl['storage_overhead_pct']}% (worst case "
-          f"{hl['worst_case_storage_pct']}%, paper 1.56%), cache penalty "
-          f"{hl['cache_penalty_pct']}% (paper 3.3%), BISnp fan-out "
-          f"{hl['bisnp_us_per_commit']}us/commit "
-          f"({hl['bisnp_us_per_host']}us/host)")
-    mt = rec["multi_tenant"]
-    print(f"  multi-tenant: {mt['procs']} procs on {mt['hosts']} hosts "
-          f"(max {mt['procs_per_host_max']}/host), churn/static "
-          f"{mt['churn_over_static_x']}x (gate <= {MT_CHURN_GATE}x)")
-    bad = [g for g, ok in rec["gates"].items() if not ok]
+
+    bad: list[str] = []
+    if not args.timing_only:
+        rec = run_sweep(smoke=args.smoke, hosts=hosts,
+                        max_procs=args.max_procs, steps=args.steps,
+                        batch=args.batch, seed=args.seed)
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+        hl = rec["headline"]
+        print(f"wrote {args.out}")
+        print(f"  {hl['hosts']} hosts / {hl['procs']} procs: "
+              f"storage {hl['storage_overhead_pct']}% (worst case "
+              f"{hl['worst_case_storage_pct']}%, paper 1.56%), cache penalty "
+              f"{hl['cache_penalty_pct']}% (paper 3.3%), BISnp fan-out "
+              f"{hl['bisnp_us_per_commit']}us/commit "
+              f"({hl['bisnp_us_per_host']}us/host)")
+        mt = rec["multi_tenant"]
+        print(f"  multi-tenant: {mt['procs']} procs on {mt['hosts']} hosts "
+              f"(max {mt['procs_per_host_max']}/host), churn/static "
+              f"{mt['churn_over_static_x']}x (gate <= {MT_CHURN_GATE}x)")
+        bad += [g for g, ok in rec["gates"].items() if not ok]
+
+    if not args.no_timing:
+        trec = run_timing_sweep(smoke=args.smoke, hosts=hosts,
+                                max_procs=args.max_procs, seed=args.seed)
+        with open(args.timing_out, "w") as f:
+            json.dump(trec, f, indent=1, default=float)
+        thl = trec["headline"]
+        print(f"wrote {args.timing_out}")
+        print(f"  {thl['hosts']} hosts: commit propagation p50 "
+              f"{thl['prop_p50_ns']}ns / p99 {thl['prop_p99_ns']}ns, "
+              f"critical link {thl['critical_link']}, 16 KiB PermCache "
+              f"penalty {thl['timing_penalty_16k_pct']}% "
+              f"(paper 3.3%; no cache "
+              f"{thl['timing_penalty_nocache_pct']}%)")
+        bad += [g for g, ok in trec["gates"].items() if not ok]
+
     if bad:
         raise SystemExit(f"GATE FAILED: {', '.join(bad)}")
 

@@ -30,11 +30,24 @@ asynchronously, in order, some time later.
     observes the epoch gap on the next event and resyncs (drop-everything
     path) instead of trusting stale mappings.
 
-The bus is deliberately deterministic (no threads, no clocks): "async" means
-*delivery is decoupled from publication and interleavable per host*, which is
-the property the convergence differential test pins — any schedule of
-`deliver()` calls followed by `quiesce()` leaves every host in the same state
-as the old synchronous broadcast.
+The bus is deliberately deterministic (no threads, no wall clocks): "async"
+means *delivery is decoupled from publication and interleavable per host*,
+which is the property the convergence differential test pins — any schedule
+of `deliver()` calls followed by `quiesce()` leaves every host in the same
+state as the old synchronous broadcast.
+
+**Clocked mode** (``BISnpBus(clock=ClockedFabric(...))``) keeps every one of
+those invariants but replaces the *manual pump* with simulated time: each
+published copy is routed through the fabric timing model
+(`repro.memsim.clock` — FM egress-port serialization, per-host downlink
+propagation, ordered-channel clamp) and its delivery callback is scheduled
+on the global cycle heap.  `deliver`/`drain`/`quiesce` then ADVANCE THE
+CLOCK until the requested events have arrived instead of popping queues
+directly, and every delivery is timestamped in `bus.timeline` —
+(epoch, host, publish_cycle, arrive_cycle) — which is where commit-
+propagation latency percentiles come from (`repro.memsim.replay`,
+``BENCH_timing.json``).  The differential test in tests/test_fabric.py pins
+that clocked and manual runs converge to identical fabric state.
 """
 from __future__ import annotations
 
@@ -42,22 +55,37 @@ from collections import deque
 from typing import Callable, TYPE_CHECKING
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (fm imports bus)
+    from repro.memsim.clock import ClockedFabric
     from .fm import BISnpEvent
 
 
 class BISnpBus:
-    """Deterministic per-host ordered delivery of FM back-invalidates."""
+    """Deterministic per-host ordered delivery of FM back-invalidates.
 
-    def __init__(self, *, max_lag: int | None = 64):
+    Invariants (both modes): per-host FIFO delivery in publish order;
+    `lag(host) <= max_lag` after every `publish`; a raising handler never
+    blocks other hosts (`errors` ledger); after `quiesce()` every attached
+    host has observed every committed epoch.
+    """
+
+    def __init__(self, *, max_lag: int | None = 64,
+                 clock: "ClockedFabric | None" = None):
         if max_lag is not None and max_lag < 1:
             raise ValueError("max_lag must be >= 1 (or None for unbounded)")
         self.max_lag = max_lag
+        self.clock = clock
         self._queues: dict[int, deque] = {}
         self._handlers: dict[int, Callable[["BISnpEvent"], None]] = {}
         self.published = 0
         self.delivered = 0
         self.forced_deliveries = 0   # events delivered by the lag bound
         self.errors: list[tuple[int, object, BaseException]] = []
+        # clocked mode only: (epoch, host_id, publish_cycle, arrive_cycle)
+        # appended at delivery time — the raw commit-propagation record
+        self.timeline: list[tuple[int, int, int, int]] = []
+        # trace recorder hook (repro.memsim.replay): called once per
+        # published event with (ev, n_attached_hosts); None = not recording
+        self.tap: Callable[["BISnpEvent", int], None] | None = None
 
     # -- membership ----------------------------------------------------------
     def attach(self, host_id: int,
@@ -78,20 +106,43 @@ class BISnpBus:
 
     @property
     def hosts(self) -> tuple[int, ...]:
+        """IDs of every attached host, in attach order."""
         return tuple(self._handlers)
 
     # -- publication ---------------------------------------------------------
     def publish(self, ev: "BISnpEvent") -> None:
         """Enqueue `ev` on every attached host's queue, enforcing the lag
         bound by force-delivering each over-full host's OLDEST events first
-        (order preserved — the new event is always consumed last)."""
+        (order preserved — the new event is always consumed last).  In
+        clocked mode each copy is additionally routed through the fabric
+        model and its delivery scheduled at the computed arrival cycle."""
         self.published += 1
+        if self.tap is not None:
+            self.tap(ev, len(self._queues))
         for host_id, q in self._queues.items():
             q.append(ev)
+            if self.clock is not None:
+                t_pub = self.clock.now
+                arrive = self.clock.bisnp_send(host_id)
+                self.clock.schedule(
+                    arrive, lambda h=host_id, e=ev, t0=t_pub, t1=arrive:
+                    self._arrival(h, e, t0, t1))
             if self.max_lag is not None:
                 while len(q) > self.max_lag:
                     self.forced_deliveries += 1
                     self._deliver_one(host_id, q)
+
+    def _arrival(self, host_id: int, ev: "BISnpEvent",
+                 t_pub: int, t_arr: int) -> None:
+        """Clock callback: one copy arrived at `host_id` — deliver the
+        FRONT of its FIFO (arrivals are ordered-channel clamped, so front
+        == this copy unless the lag bound force-delivered it already, in
+        which case the arrival is a timestamp-only no-op).  Detached hosts
+        drop pending arrivals."""
+        q = self._queues.get(host_id)
+        self.timeline.append((ev.epoch, host_id, t_pub, t_arr))
+        if q:
+            self._deliver_one(host_id, q)
 
     # -- consumption ---------------------------------------------------------
     def _deliver_one(self, host_id: int, q: deque) -> None:
@@ -104,9 +155,20 @@ class BISnpBus:
 
     def deliver(self, host_id: int, max_events: int | None = None) -> int:
         """Consume up to `max_events` (default: all) queued events at one
-        host, in publish order.  Returns the number delivered."""
+        host, in publish order.  Returns the number delivered.  In clocked
+        mode this ADVANCES SIMULATED TIME — the global clock runs (firing
+        every host's due arrivals on the way) until the requested events
+        have arrived at `host_id`."""
         q = self._queues[host_id]
         n = len(q) if max_events is None else min(max_events, len(q))
+        if self.clock is not None:
+            target = len(q) - n
+            while len(q) > target:
+                if not self.clock.clock.step():
+                    raise RuntimeError(
+                        f"clocked bus: {len(q) - target} queued events at "
+                        f"host {host_id} have no scheduled arrival")
+            return n
         for _ in range(n):
             self._deliver_one(host_id, q)
         return n
@@ -118,16 +180,25 @@ class BISnpBus:
         commit at or below that snapshot's epoch, without forcing a
         fabric-wide `quiesce()`.  Events past `epoch` stay queued (the
         per-host FIFO is epoch-ordered, so the prefix is exact).  Returns
-        the number delivered."""
+        the number delivered.  Clocked mode runs the clock until the
+        host's observed epoch reaches the fence."""
         q = self._queues[host_id]
         n = 0
+        if self.clock is not None:
+            before = len(q)
+            while q and q[0].epoch <= epoch:
+                if not self.clock.clock.step():
+                    raise RuntimeError("clocked bus: queued event has no "
+                                       "scheduled arrival")
+            return before - len(q)
         while q and q[0].epoch <= epoch:
             self._deliver_one(host_id, q)
             n += 1
         return n
 
     def drain(self, host_id: int | None = None) -> int:
-        """Deliver everything queued at one host (or, with None, at all)."""
+        """Deliver everything queued at one host (or, with None, at all).
+        Clocked mode advances the clock until the queue(s) empty."""
         if host_id is not None:
             return self.deliver(host_id)
         return sum(self.deliver(h) for h in tuple(self._queues))
@@ -135,7 +206,17 @@ class BISnpBus:
     def quiesce(self) -> int:
         """Fabric barrier: deliver until every queue is empty (handlers may
         not publish, so one pass suffices; asserted).  After `quiesce()`
-        every attached host has observed every committed epoch."""
+        every attached host has observed every committed epoch.  In clocked
+        mode the barrier runs the clock to idle — `clock.now` afterwards is
+        when the LAST host observed the last commit (the fabric-wide
+        propagation horizon)."""
+        if self.clock is not None:
+            before = self.delivered
+            self.clock.clock.run()
+            if any(self._queues.values()):
+                raise RuntimeError("bus handlers must not publish during "
+                                   "delivery — quiesce barrier violated")
+            return self.delivered - before
         n = self.drain()
         if any(self._queues.values()):
             raise RuntimeError("bus handlers must not publish during "
@@ -148,4 +229,10 @@ class BISnpBus:
         return len(self._queues[host_id])
 
     def max_observed_lag(self) -> int:
+        """Largest current backlog across every attached host."""
         return max((len(q) for q in self._queues.values()), default=0)
+
+    def propagation_cycles(self):
+        """Per-delivery propagation latencies (arrive - publish cycles)
+        from the clocked timeline, as a list — empty in manual mode."""
+        return [t1 - t0 for _, _, t0, t1 in self.timeline]

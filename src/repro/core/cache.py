@@ -19,6 +19,10 @@ ENTRY_BYTES = 64
 
 
 class LruCache:
+    """Fully-associative LRU over 64 B permission entries — the simple
+    host-side permission-cache model (the set-associative `PermCache` in
+    `repro.core.checker` is the device-speed one)."""
+
     def __init__(self, capacity_bytes: int):
         if capacity_bytes % ENTRY_BYTES:
             raise ValueError("capacity must be a multiple of 64 B entries")
@@ -45,9 +49,11 @@ class LruCache:
             self._od.pop(k, None)
 
     def invalidate_all(self) -> None:
+        """Drop every cached entry (full flush; counters survive)."""
         self._od.clear()
 
     @property
     def miss_ratio(self) -> float:
+        """Lifetime miss fraction (0.0 before any access)."""
         t = self.hits + self.misses
         return self.misses / t if t else 0.0

@@ -37,6 +37,7 @@ FAULT_PERM = 4            # entry found but R/W bits deny the access
 
 
 class CheckResult(NamedTuple):
+    """Per-access verdicts of one permission-check batch (B accesses)."""
     allowed: jax.Array      # bool[B]
     fault: jax.Array        # i32[B] fault codes
     entry_idx: jax.Array    # i32[B] matched entry (-1 if none)
@@ -143,6 +144,9 @@ PERM_CACHE_WAYS = 4             # default associativity (4-way x 64 sets)
 
 
 class PermCache(NamedTuple):
+    """Set-associative (page -> table entry) cache with tree-PLRU
+    replacement and an epoch fence: mappings are trusted only while
+    `epoch` matches the table's (paper's 16 KiB permission cache)."""
     tag: jax.Array      # i32[n_sets, n_ways] cached page address (-1 invalid)
     entry: jax.Array    # i32[n_sets, n_ways] table entry index matched
     plru: jax.Array     # u32[n_sets] tree-PLRU bits (low n_ways-1 bits used)
@@ -152,18 +156,22 @@ class PermCache(NamedTuple):
 
     @property
     def n_sets(self) -> int:
+        """Number of sets (pages index by ``page % n_sets``)."""
         return self.tag.shape[0]
 
     @property
     def n_ways(self) -> int:
+        """Associativity (lines per set)."""
         return self.tag.shape[1]
 
     @property
     def capacity_bytes(self) -> int:
+        """Total capacity at 64 B per cached entry."""
         return self.n_sets * self.n_ways * CACHE_ENTRY_BYTES
 
     @property
     def hit_rate(self) -> float:
+        """Lifetime probe hit fraction (0.0 before any probe)."""
         t = int(self.hits) + int(self.misses)
         return int(self.hits) / t if t else 0.0
 

@@ -148,9 +148,13 @@ class HostRuntime:
         self.fabric._fabric_view_key = None
 
     def resident_ranges(self) -> list[tuple[int, int]]:
+        """Page ranges [lo, hi) this host's checker is resident for: its
+        own shard plus every pinned shared range (duplicates preserved —
+        the pin is occurrence-counted)."""
         return [(self.page_lo, self.page_hi)] + self._extra_ranges
 
     def lag(self) -> int:
+        """BISnp events published but not yet observed by this host."""
         return self.fabric.fm.bus.lag(self.host_id)
 
     def _resident_entries(self):
@@ -193,6 +197,8 @@ class HostRuntime:
         return self._shard
 
     def shard_entries(self) -> int:
+        """Committed entries in this host's resident shard (forces an
+        extraction at the current epoch if one is pending)."""
         return self._resident_entries()[0].shape[0]
 
     def shard_table(self) -> PermissionTable:
@@ -233,6 +239,8 @@ class HostRuntime:
 
     # -- the host-side egress check -----------------------------------------
     def hwpid_local(self) -> jax.Array:
+        """HWPID_local membership vector for the checker (paper §4.2.2),
+        rebuilt lazily whenever this host's tenant set changes."""
         if self._hwpid_local is None:
             self._hwpid_local = make_hwpid_local(sorted(self.hwpids))
         return self._hwpid_local
@@ -274,6 +282,7 @@ class FabricView(NamedTuple):
 
     @property
     def n_hosts(self) -> int:
+        """Number of stacked kernel rows (one per (host, tenant) pair)."""
         return self.starts.shape[0]
 
 
@@ -320,11 +329,11 @@ class ShardedFabric:
 
     def __init__(self, sdm_pages: int, table_capacity: int, n_shards: int,
                  *, max_bisnp_lag: int | None = 64,
-                 perm_cache_bytes: int = PERM_CACHE_BYTES):
+                 perm_cache_bytes: int = PERM_CACHE_BYTES, clock=None):
         if not (1 <= n_shards <= 255):
             raise ValueError("n_shards must be in [1, 255] (paper abstract)")
         self.fm = FabricManager(sdm_pages, table_capacity,
-                                max_bisnp_lag=max_bisnp_lag)
+                                max_bisnp_lag=max_bisnp_lag, clock=clock)
         self.n_shards = n_shards
         self.perm_cache_bytes = perm_cache_bytes
         self.runtimes: dict[int, HostRuntime] = {}
@@ -347,6 +356,9 @@ class ShardedFabric:
         self._fabric_view_key = None
         self.view_rebuilds = 0
         self.view_reuses = 0
+        # timing-trace recorder (repro.memsim.replay.FabricTrace); set by
+        # begin_trace(), consumed by end_trace() — None = not recording
+        self._trace = None
 
     # -- topology ------------------------------------------------------------
     def shard_range(self, host_id: int) -> tuple[int, int]:
@@ -358,6 +370,8 @@ class ShardedFabric:
         return lo, min(lo + per, self.fm.sdm_pages)
 
     def enroll(self, host_id: int, *, n_cores: int = 8) -> HostRuntime:
+        """Enroll one host: FM key derivation + a HostRuntime resident for
+        shard `host_id`, attached to the BISnp bus."""
         self.fm.enroll_host(host_id, n_cores)
         lo, hi = self.shard_range(host_id)
         rt = HostRuntime(self, host_id, lo, hi,
@@ -487,6 +501,8 @@ class ShardedFabric:
 
     # -- BISnp observation ---------------------------------------------------
     def deliver(self, host_id: int, max_events: int | None = None) -> int:
+        """Consume up to `max_events` queued BISnp events at one host (see
+        `BISnpBus.deliver`; in clocked mode this advances simulated time)."""
         return self.fm.bus.deliver(host_id, max_events)
 
     def quiesce(self) -> int:
@@ -541,8 +557,39 @@ class ShardedFabric:
         """
         from repro.kernels.fabric_egress import fabric_egress_pallas
         view = self.fabric_view(hwpid_by_host)
+        if self._trace is not None:
+            from .table import PAGE_MASK
+            pages = np.asarray(ext_addrs, np.int64) & PAGE_MASK
+            self._trace.record_egress(self.fabric_rows(hwpid_by_host), pages,
+                                      epoch=self.fm.epoch)
         return fabric_egress_pallas(
             data, ext_addrs, view, need=need, key0=key0, key1=key1)
+
+    # -- timing-trace recording ---------------------------------------------
+    def begin_trace(self, *, label: str = ""):
+        """Start recording a fabric timing trace (commit fan-outs via the
+        bus tap + egress page streams from `step_egress`).  Returns the
+        `repro.memsim.replay.FabricTrace`; feed it to `end_trace()` when
+        done, then replay it through the clocked cost model."""
+        from repro.memsim.replay import FabricTrace
+        if self._trace is not None:
+            raise RuntimeError("a trace is already recording")
+        tr = FabricTrace(label=label)
+        self._trace = tr
+        self.fm.bus.tap = lambda ev, n_hosts: tr.record_commit(
+            ev.epoch, n_hosts)
+        return tr
+
+    def end_trace(self):
+        """Stop recording, finalize the trace (derive per-row PermCache
+        miss profiles from the recorded page streams), and return it."""
+        tr = self._trace
+        if tr is None:
+            raise RuntimeError("no trace is recording")
+        self._trace = None
+        self.fm.bus.tap = None
+        tr.finalize(perm_cache_bytes=self.perm_cache_bytes)
+        return tr
 
     # -- accounting ----------------------------------------------------------
     def storage_overhead(self) -> dict:
@@ -558,6 +605,8 @@ class ShardedFabric:
         }
 
     def stats(self) -> dict:
+        """Deployment-wide counters (bus delivery, shard rebuilds/sizes) —
+        read-only: never forces a shard extraction or view rebuild."""
         bus = self.fm.bus
         return {
             "hosts": len(self.runtimes),

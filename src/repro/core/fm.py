@@ -67,7 +67,7 @@ class FabricManager:
 
     def __init__(self, sdm_pages: int, table_capacity: int,
                  master_secret: bytes = b"space-control-fm-master",
-                 *, max_bisnp_lag: int | None = 64):
+                 *, max_bisnp_lag: int | None = 64, clock=None):
         self._k_fm = derive_key(master_secret, "K_FM")
         self.sdm_pages = sdm_pages
         self.table = HostTable(table_capacity)
@@ -77,8 +77,10 @@ class FabricManager:
         self._free_hwpids: list[int] = list(range(1, MAX_HWPID + 1))
         self._hwpid_global: set[int] = set()
         self._bisnp_listeners: list[Callable[[BISnpEvent], None]] = []
-        # async delivery plane: HostRuntimes attach here (repro.core.fabric)
-        self.bus = BISnpBus(max_lag=max_bisnp_lag)
+        # async delivery plane: HostRuntimes attach here (repro.core.fabric).
+        # `clock` (a repro.memsim.clock.ClockedFabric) switches the bus to
+        # simulated-time delivery; None keeps the manual pump.
+        self.bus = BISnpBus(max_lag=max_bisnp_lag, clock=clock)
         self.bisnp_errors: list[tuple[Callable, BISnpEvent,
                                       BaseException]] = []
         self.audit_log: list[str] = []
@@ -90,6 +92,8 @@ class FabricManager:
 
     # -- host enrolment --------------------------------------------------------
     def enroll_host(self, host_id: int, n_cores: int = 8) -> SpaceEngine:
+        """Derive K_host and hand the host a SpaceEngine drawing HWPIDs
+        from the deployment-wide pool (up to 255 hosts, paper abstract)."""
         if host_id in self.hosts:
             raise ValueError(f"host {host_id} already enrolled")
         if len(self.hosts) >= 255:
@@ -106,11 +110,14 @@ class FabricManager:
         self._policy = fn
 
     def on_bisnp(self, fn: Callable[[BISnpEvent], None]) -> None:
+        """Register a legacy synchronous BISnp listener (failure-isolated;
+        fabric-scale consumers attach to `self.bus` instead)."""
         self._bisnp_listeners.append(fn)
 
     # -- epoch-versioned commit plumbing ---------------------------------------
     @property
     def epoch(self) -> int:
+        """Committed table version (bumped once per transaction)."""
         return self.table.epoch
 
     @contextlib.contextmanager
@@ -277,5 +284,6 @@ class FabricManager:
         return worst_entries * 64 / (self.sdm_pages * 4096)
 
     @property
-    def k_fm(self) -> bytes:   # exposed for attestation tests only
+    def k_fm(self) -> bytes:
+        """The FM master key — exposed for attestation tests only."""
         return self._k_fm

@@ -22,6 +22,7 @@ from .table import PAGE_BYTES, PermissionTable, pack_ext_addr
 
 @dataclass(frozen=True)
 class Region:
+    """One named tensor's page-granular placement in the shared SDM."""
     name: str
     start_page: int
     n_pages: int
@@ -31,6 +32,7 @@ class Region:
 
     @property
     def bytes_per_row(self) -> int:
+        """Row footprint in bytes (drives the row -> page mapping)."""
         return int(np.prod(self.row_shape)) * np.dtype(self.dtype).itemsize
 
     def pages_for_rows(self, row_idx):
@@ -72,6 +74,8 @@ class SharedTensorPool:
         return start
 
     def register(self, name: str, tensor: jax.Array) -> Region:
+        """Place a tensor in the pool: allocate a page span (first-fit over
+        freed spans, else bump) and record its row-granular Region."""
         if name in self._regions:
             raise ValueError(f"region {name} exists")
         rows = tensor.shape[0]
@@ -128,21 +132,27 @@ class SharedTensorPool:
         return region
 
     def region(self, name: str) -> Region:
+        """Placement record of a registered tensor (KeyError if absent)."""
         return self._regions[name]
 
     def tensor(self, name: str) -> jax.Array:
+        """Current backing array of a registered tensor."""
         return self._tensors[name]
 
     def update(self, name: str, tensor: jax.Array) -> None:
+        """Replace a tensor's backing array in place (same row count —
+        the page placement is immutable)."""
         assert tensor.shape[0] == self._regions[name].rows
         self._tensors[name] = tensor
 
     @property
     def total_pages(self) -> int:
+        """Pages ever allocated (the bump-cursor high-water mark)."""
         return self._next_page
 
 
 class GatherResult(NamedTuple):
+    """A checked gather: fetched rows + the per-row permission verdicts."""
     data: jax.Array
     check: CheckResult
 

@@ -25,6 +25,8 @@ RING_KERNEL = 0
 
 @dataclass
 class CoreState:
+    """Per-core SPACE register state: the L_host shadow register and the
+    (hwpid, base_p) context it was validated for (paper Fig. 3)."""
     label_register: int | None = None   # L_host shadow register
     ctx: tuple[int, int] | None = None  # (hwpid, base_p) active context
     validated: bool = False

@@ -48,6 +48,8 @@ _NO_END = np.int32(np.iinfo(np.int32).min)   # "empty tile" max-end sentinel
 
 
 class PermissionTable(NamedTuple):
+    """Device-resident permission table: sorted page-range entries with
+    2-bit-per-HWPID permission words (64 B/entry, paper Fig. 2/5)."""
     starts: jax.Array   # i32[cap] sorted ascending, tail = EMPTY_START
     sizes: jax.Array    # i32[cap]
     perms: jax.Array    # u32[cap, PERM_WORDS]
@@ -57,6 +59,7 @@ class PermissionTable(NamedTuple):
 
     @property
     def capacity(self) -> int:
+        """Allocated entry slots (live entries are the first `n`)."""
         return self.starts.shape[0]
 
     def nbytes_metadata(self) -> int:
@@ -124,6 +127,7 @@ def summary_candidate_tiles(pages, tile_min, tile_max, *, block: int):
 
 
 def make_table(capacity: int) -> PermissionTable:
+    """An empty device table with `capacity` entry slots."""
     return PermissionTable(
         starts=jnp.full((capacity,), EMPTY_START, jnp.int32),
         sizes=jnp.zeros((capacity,), jnp.int32),
@@ -141,6 +145,7 @@ def pack_ext_addr(hwpid, page):
 
 
 def unpack_ext_addr(ext):
+    """Split tagged extended addresses back into (hwpid, page)."""
     ext = jnp.asarray(ext, jnp.int32)
     return ext >> HWPID_SHIFT, ext & PAGE_MASK
 
@@ -244,6 +249,7 @@ class HostTable:
                             self.perms.copy(), self.meta.copy(), self.n)
 
     def abort(self) -> None:
+        """Discard the open shadow transaction (no epoch bump)."""
         self._shadow = None
 
     def commit(self) -> CommitInfo | None:
@@ -494,6 +500,8 @@ class HostTable:
         )
 
     def check_invariants(self) -> None:
+        """Assert the committed geometry: strictly sorted, non-overlapping
+        entries (test/debug hook; raises AssertionError on violation)."""
         s = self.starts[: self.n]
         e = s + self.sizes[: self.n]
         assert np.all(np.diff(s) > 0), "starts not strictly sorted"

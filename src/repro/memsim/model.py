@@ -85,19 +85,24 @@ class SimConfig:
 
     @property
     def eff_llc(self) -> float:
+        """Effective LLC hit cost (20-deep overlap absorbs most of it)."""
         return self.lat_llc / 20.0
 
     @property
     def eff_remote(self) -> float:
+        """Effective remote-access cost after data-level MLP overlap."""
         return self.lat_remote / self.mlp_data
 
     @property
     def eff_probe(self) -> float:
+        """Effective table-probe cost (probe chains pipeline pairwise)."""
         return self.lat_remote / self.mlp_chain
 
 
 @dataclass
 class SimResult:
+    """One simulated (kernel, system) cell: CPI, normalized overhead, and
+    the probe/stall distributions behind the paper's figures."""
     kernel: str = ""
     system: str = ""
     cpi: float = 0.0

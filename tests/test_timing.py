@@ -1,0 +1,184 @@
+"""Clocked fabric timing simulator: Clock event-loop semantics, Link
+contention math, determinism under a fixed seed, trace record -> serialize
+-> replay roundtrip, and the PermCache timing-penalty ordering."""
+import numpy as np
+import pytest
+
+from repro.memsim.clock import (Clock, ClockedFabric, FabricTopology, Link,
+                                TimingConfig)
+from repro.memsim.replay import (FabricTrace, replay, timing_penalty)
+
+
+# ---------------------------------------------------------------------------
+# Clock
+# ---------------------------------------------------------------------------
+
+def test_clock_fires_in_cycle_then_schedule_order():
+    c = Clock()
+    order = []
+    c.at(5, lambda: order.append("a5"))
+    c.at(3, lambda: order.append("b3"))
+    c.at(5, lambda: order.append("c5"))
+    c.at(3, lambda: order.append("d3"))
+    assert c.run() == 4
+    assert order == ["b3", "d3", "a5", "c5"]   # cycle, then schedule order
+    assert c.now == 5 and c.idle
+
+
+def test_clock_rejects_past_and_supports_nested_schedule():
+    c = Clock()
+    with pytest.raises(ValueError):
+        c.at(-1, lambda: None)
+    fired = []
+    c.at(10, lambda: (fired.append(c.now), c.after(5, lambda:
+                                                   fired.append(c.now))))
+    c.run()
+    assert fired == [10, 15]
+    with pytest.raises(ValueError):     # now == 15: the past stays closed
+        c.at(3, lambda: None)
+
+
+def test_clock_run_until_advances_time_without_work():
+    c = Clock()
+    c.at(4, lambda: None)
+    assert c.run(until=100) == 1
+    assert c.now == 100 and c.idle
+    c.at(100, lambda: None)    # now is legal again
+    assert c.step() and not c.step()
+
+
+# ---------------------------------------------------------------------------
+# Link
+# ---------------------------------------------------------------------------
+
+def test_link_serialization_and_queueing():
+    cfg = TimingConfig(link_latency=100, downlink_gbps=4.0)  # 1 byte/cycle
+    link = Link("l", latency=100, gbps=4.0, cfg=cfg)
+    a1 = link.send(0, 64)     # occupies [0, 64), arrives 164
+    a2 = link.send(0, 64)     # queues behind: occupies [64, 128)
+    assert a1 == 164 and a2 == 228
+    assert link.wait_cycles == 64 and link.busy_cycles == 128
+    assert link.queue_factor() == pytest.approx(1.5)
+    assert link.utilization(256) == pytest.approx(0.5)
+
+
+def test_link_burst_matches_repeated_sends():
+    cfg = TimingConfig()
+    a = Link("a", latency=500, gbps=19.2, cfg=cfg)
+    b = Link("b", latency=500, gbps=19.2, cfg=cfg)
+    last = 0
+    for _ in range(37):
+        last = a.send(10, 64)
+    burst = b.send_burst(10, 37, 64)
+    assert burst == last
+    assert a.busy_cycles == b.busy_cycles and a.msgs == b.msgs
+    assert b.send_burst(10, 0, 64) == 10   # empty burst is a no-op
+
+
+# ---------------------------------------------------------------------------
+# ClockedFabric: ordered channel + determinism
+# ---------------------------------------------------------------------------
+
+def test_ordered_channel_clamp_under_jitter():
+    cf = ClockedFabric(TimingConfig(jitter=400), seed=11)
+    arrivals = [cf.bisnp_send(0) for _ in range(64)]
+    assert arrivals == sorted(arrivals), \
+        "per-host arrivals must never reorder (ordered CXL channel)"
+
+
+def test_clocked_fabric_deterministic_under_fixed_seed():
+    def run(seed):
+        cf = ClockedFabric(TimingConfig(jitter=50), seed=seed)
+        return [cf.bisnp_send(h % 3) for h in range(30)], cf.stats()
+
+    a1, s1 = run(7)
+    a2, s2 = run(7)
+    b, _ = run(8)
+    assert a1 == a2 and s1 == s2
+    assert a1 != b, "different seeds must perturb jittered arrivals"
+
+
+# ---------------------------------------------------------------------------
+# Trace replay
+# ---------------------------------------------------------------------------
+
+def _mk_trace(*, n_hosts=3, steps=4, batch=64, span=512, seed=0):
+    rng = np.random.default_rng(seed)
+    tr = FabricTrace(label="unit")
+    rows = [(h, 10 + h) for h in range(n_hosts)]
+    tr.record_commit(1, n_hosts)
+    for _ in range(steps):
+        pages = rng.integers(0, span, (n_hosts, batch)).astype(np.int64)
+        tr.record_egress(rows, pages, epoch=1)
+    tr.record_commit(2, n_hosts)
+    return tr.finalize(perm_cache_bytes=16 * 1024)
+
+
+def test_replay_roundtrip_preserves_events_and_cycles():
+    tr = _mk_trace()
+    rep = replay(tr)
+    tr2 = FabricTrace.from_json(tr.to_json())
+    rep2 = replay(tr2)
+    assert tr2.n_events == tr.n_events
+    assert [e[0] for e in tr2.events] == [e[0] for e in tr.events]
+    assert [s.perm_misses for s in tr2.steps] == \
+        [s.perm_misses for s in tr.steps]
+    assert rep2.to_dict() == rep.to_dict()
+
+
+def test_replay_requires_finalize_and_reports_critical_path():
+    raw = FabricTrace()
+    raw.record_commit(1, 2)
+    with pytest.raises(RuntimeError):
+        replay(raw)
+    rep = replay(_mk_trace())
+    assert rep.cycles > 0 and rep.egress_cycles > 0
+    assert rep.critical_path["link"] in rep.links
+    assert rep.critical_path["host"] is not None
+    assert rep.propagation["n"] == 6    # 2 commits x 3 hosts
+
+
+def test_permcache_timing_penalty_ordering():
+    """none <= cached <= nocache, strictly when the working set misses:
+    the 16 KiB cache's tax must sit between free checking and a fetch per
+    access (the measured Fig. 13 shape)."""
+    tr = _mk_trace(span=4096)           # working set >> 256 cached entries
+    pen = timing_penalty(tr)
+    assert pen["cycles_none"] <= pen["cycles_cached"] <= pen["cycles_nocache"]
+    assert 0.0 < pen["penalty_cached_pct"] < pen["penalty_nocache_pct"]
+    small = timing_penalty(_mk_trace(span=64))   # fits: near-free checking
+    assert small["penalty_cached_pct"] <= pen["penalty_cached_pct"]
+
+
+def test_miss_profile_uses_cache_size_and_carries_across_steps():
+    rng = np.random.default_rng(0)
+    rows = [(0, 1)]
+    pages = rng.integers(0, 128, (1, 256)).astype(np.int64)   # fits in 256
+
+    def misses(cache_bytes):
+        tr = FabricTrace()
+        for _ in range(3):
+            tr.record_egress(rows, pages, epoch=0)
+        tr.finalize(perm_cache_bytes=cache_bytes)
+        return [s.perm_misses[0] for s in tr.steps]
+
+    big = misses(16 * 1024)
+    tiny = misses(1024)          # 16 entries: thrashes
+    none = misses(0)             # no cache: every access misses
+    assert sum(big) < sum(tiny) < sum(none)
+    assert none == [256, 256, 256]
+    # steady state: the warm cache makes later steps strictly cheaper
+    assert big[1] < big[0] and big[2] <= big[1]
+
+
+def test_replay_is_deterministic():
+    tr = _mk_trace(seed=3)
+    assert replay(tr, seed=5).to_dict() == replay(tr, seed=5).to_dict()
+
+
+def test_fabric_topology_lazy_downlinks():
+    topo = FabricTopology(TimingConfig())
+    assert len(topo.links()) == 2            # egress + device
+    topo.downlink(4)
+    topo.downlink(4)
+    assert len(topo.links()) == 3 and 4 in topo.downlinks

@@ -1,0 +1,106 @@
+"""Documentation lint: pydocstyle-D1-style docstring checks + link check.
+
+Stdlib-only (CI must not depend on extra packages), two passes:
+
+  * **docstring presence** (the pydocstyle D100-D104 family) over
+    ``src/repro/core`` and ``src/repro/memsim``: every module, every
+    public module-level class and function, and every public method must
+    carry a docstring.  Private names (leading underscore), dunders, and
+    closures nested inside functions are exempt — matching how the
+    codebase treats nested helper defs as implementation detail;
+  * **markdown link check** over ``README.md`` and ``docs/*.md``: every
+    relative link target must exist (absolute URLs are not fetched —
+    CI must stay hermetic), and every doc under ``docs/`` must be
+    reachable from ``docs/README.md`` (no orphan pages).
+
+Exit status: 0 clean, 1 with findings (one line each).
+
+    python tools/docs_lint.py [--root .]
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import pathlib
+import re
+import sys
+
+DOC_SCOPES = ["src/repro/core", "src/repro/memsim"]
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)]*)?\)")
+
+
+def docstring_gaps(path: pathlib.Path) -> list[str]:
+    """D1-family findings for one file: ``code name:line`` strings."""
+    tree = ast.parse(path.read_text())
+    out = []
+    if not ast.get_docstring(tree):
+        out.append(f"{path}:1 D100 missing module docstring")
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if not node.name.startswith("_") and not ast.get_docstring(node):
+                out.append(f"{path}:{node.lineno} D103 missing docstring "
+                           f"in function {node.name}")
+        elif isinstance(node, ast.ClassDef):
+            if not node.name.startswith("_") and not ast.get_docstring(node):
+                out.append(f"{path}:{node.lineno} D101 missing docstring "
+                           f"in class {node.name}")
+            for m in node.body:
+                if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and not m.name.startswith("_") \
+                        and not ast.get_docstring(m):
+                    out.append(f"{path}:{m.lineno} D102 missing docstring "
+                               f"in method {node.name}.{m.name}")
+    return out
+
+
+def link_gaps(root: pathlib.Path) -> list[str]:
+    """Broken relative links + docs/ pages unreachable from the index."""
+    out = []
+    pages = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    linked_docs: set[pathlib.Path] = set()
+    for page in pages:
+        if not page.exists():
+            out.append(f"{page}: required page is missing")
+            continue
+        for m in MD_LINK.finditer(page.read_text()):
+            target = m.group(1)
+            if "://" in target or target.startswith("mailto:"):
+                continue
+            resolved = (page.parent / target).resolve()
+            if not resolved.exists():
+                out.append(f"{page}: broken link -> {target}")
+            elif resolved.suffix == ".md" and \
+                    resolved.is_relative_to((root / "docs").resolve()):
+                linked_docs.add(resolved)
+    index = root / "docs" / "README.md"
+    for doc in sorted((root / "docs").glob("*.md")):
+        if doc == index:
+            continue
+        if doc.resolve() not in linked_docs:
+            out.append(f"{doc}: orphan — not linked from docs/README.md "
+                       f"or README.md")
+    return out
+
+
+def main() -> int:
+    """Run both passes; print findings; return the exit status."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=".", help="repository root")
+    args = ap.parse_args()
+    root = pathlib.Path(args.root)
+    findings: list[str] = []
+    for scope in DOC_SCOPES:
+        for path in sorted((root / scope).glob("*.py")):
+            findings += docstring_gaps(path)
+    findings += link_gaps(root)
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"\ndocs lint: {len(findings)} finding(s)")
+        return 1
+    print("docs lint clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
