@@ -55,6 +55,17 @@ gated (floors only; the replay is deterministic so these are exact):
     (255 copies through one FM egress port at Table 2 rates is ~128 us);
   * a critical-path bottleneck link is identified.
 
+With ``--faults BENCH_faults.json`` the fault-injection record is gated
+(floors only; the chaos replay is seed-deterministic so these are exact):
+
+  * ZERO stale-grant reads across the whole seeded matrix — the
+    fail-closed acceptance claim of docs/faults.md;
+  * reconvergence after the storm within 2 recovery barriers (one FM
+    snapshot broadcast must resync the fabric), every host back in sync;
+  * matrix coverage: >= 5 seeds and at least one exercised drop,
+    duplicate, delay, FM crash, and detected sequence gap — a schedule
+    that never faulted proves nothing.
+
 Missing metrics fail loudly (a bench silently dropping out of the JSON is
 itself a regression).  Exit status: 0 clean, 1 regression/missing.
 """
@@ -145,6 +156,37 @@ TIMING_FLOORS = [
 ]
 
 
+# floors applied to the fault-injection record (`--faults`,
+# BENCH_faults.json): the fail-closed acceptance claims of docs/faults.md.
+# stale_reads_total is gated at EXACTLY zero — one stale-grant read under
+# any seeded schedule is a security regression, not noise (the chaos
+# replay is seed-deterministic).  Reconvergence is bounded: one FM
+# snapshot broadcast must resync the whole fabric, so more than 2 recovery
+# barriers means the snapshot/journal path broke.  The matrix-coverage
+# floors keep the gate honest — a schedule that never dropped a copy or
+# never crashed the FM proves nothing.
+FAULTS_FLOORS = [
+    ("faults_stale_reads_zero",
+     lambda r: float(r["headline"]["stale_reads_total"]), 0.0, "<="),
+    ("faults_recovery_rounds_max",
+     lambda r: float(r["headline"]["recovery_rounds_max"]), 2.0, "<="),
+    ("faults_all_converged",
+     lambda r: float(r["headline"]["all_converged"]), 1.0, ">="),
+    ("faults_matrix_seeds_min",
+     lambda r: float(r["headline"]["seeds"]), 5.0, ">="),
+    ("faults_drops_exercised",
+     lambda r: float(r["headline"]["dropped_total"]), 1.0, ">="),
+    ("faults_dups_exercised",
+     lambda r: float(r["headline"]["duplicated_total"]), 1.0, ">="),
+    ("faults_delays_exercised",
+     lambda r: float(r["headline"]["delayed_total"]), 1.0, ">="),
+    ("faults_fm_crashes_exercised",
+     lambda r: float(r["headline"]["fm_crashes_total"]), 1.0, ">="),
+    ("faults_gaps_detected",
+     lambda r: float(r["headline"]["desync_events_total"]), 1.0, ">="),
+]
+
+
 def check_floors(rec: dict, floors: list) -> list:
     """Apply (name, extractor, bound, direction) floors to one record."""
     out = []
@@ -187,11 +229,15 @@ def main() -> None:
                     help="fabric-scale JSON (BENCH_scale.json) to gate")
     ap.add_argument("--timing", default=None,
                     help="clocked-fabric JSON (BENCH_timing.json) to gate")
+    ap.add_argument("--faults", default=None,
+                    help="fault-injection JSON (BENCH_faults.json) to gate")
     ap.add_argument("--max-regression", type=float, default=0.25,
                     help="tolerated fractional drop (default 25%%)")
     args = ap.parse_args()
-    if args.fresh is None and args.scale is None and args.timing is None:
-        ap.error("nothing to gate: pass --fresh, --scale and/or --timing")
+    if args.fresh is None and args.scale is None and args.timing is None \
+            and args.faults is None:
+        ap.error("nothing to gate: pass --fresh, --scale, --timing "
+                 "and/or --faults")
 
     rows = []
     if args.fresh is not None:
@@ -206,6 +252,9 @@ def main() -> None:
     if args.timing is not None:
         with open(args.timing) as f:
             rows += check_floors(json.load(f), TIMING_FLOORS)
+    if args.faults is not None:
+        with open(args.faults) as f:
+            rows += check_floors(json.load(f), FAULTS_FLOORS)
     failed = False
     print(f"{'metric':36s} {'bound':>9s} {'fresh':>9s}  verdict")
     for name, base, new, ok in rows:

@@ -1,0 +1,219 @@
+"""Fault-injection acceptance bench: the chaos matrix as a measured record.
+
+    PYTHONPATH=src python benchmarks/faults_bench.py --smoke \
+        [--out BENCH_faults.json] [--seeds 5] [--rounds 14]
+
+Drives the fail-closed control plane (docs/faults.md) through a seeded
+fault matrix — drop/duplicate/delay on BISnp delivery, an FM crash inside
+the journal/broadcast window, one host crash + cold rejoin per schedule —
+and records the two acceptance numbers CI gates on
+(`compare_bench.py --faults`):
+
+  * **stale_reads_total** — revoked-grant lanes that checked as allowed on
+    any live host at any point during the storm.  The whole point of the
+    sequence/journal machinery: this is gated at EXACTLY ZERO.
+  * **recovery_rounds_max** — restart+quiesce barriers needed after the
+    storm until every host is back in sync (no desync, no quarantine) and
+    every verdict matches the live table.  Bounded reconvergence: an FM
+    snapshot broadcast resyncs the whole fabric in one round.
+
+It also measures the no-fault fast path (the tax every check and every
+publish pays for sequence stamping when nothing is failing) so a
+regression in the common case is visible in the record.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    FaultPlan,
+    FaultSpec,
+    FMUnavailable,
+    ShardedFabric,
+    pack_ext_addr,
+)
+
+
+def _ext(pid, start, n=4):
+    return pack_ext_addr(np.full(n, pid, np.int32),
+                         (start + np.arange(n)).astype(np.int32))
+
+
+def _run_chaos(seed: int, *, n_hosts: int, rounds: int) -> dict:
+    """One seeded schedule: churn + faulted partial delivery, the zero-
+    stale-reads invariant checked every round, then measured recovery."""
+    rng = np.random.default_rng(seed)
+    fab = ShardedFabric(sdm_pages=1 << 14, table_capacity=2048,
+                        n_shards=n_hosts)
+    rts = [fab.enroll(h) for h in range(n_hosts)]
+    live = {h: [fab.admit(h, 16)] for h in range(n_hosts)}
+    fab.quiesce()
+    plan = fab.inject_faults(FaultPlan(
+        FaultSpec(drop_p=0.15, dup_p=0.10, reorder_p=0.10, delay_p=0.10,
+                  max_delay=3),
+        seed=seed,
+        fm_crash_epochs=(fab.fm.epoch + 2 + int(rng.integers(0, 3)),)))
+    revoked: list[tuple[int, int, int]] = []
+    crashed_host: int | None = None
+    stale_reads = 0
+
+    for rnd in range(rounds):
+        op = int(rng.integers(0, 3))
+        if not fab.fm.crashed:
+            try:
+                if op == 0:
+                    hs = [h for h in live if live[h] and h != crashed_host]
+                    if hs:
+                        h = hs[int(rng.integers(0, len(hs)))]
+                        pid, start = live[h].pop()
+                        fab.fm.revoke_hwpid(pid)
+                        revoked.append((h, pid, start))
+                elif op == 1:
+                    h = int(rng.integers(0, n_hosts))
+                    if h != crashed_host and fab.free_pages(h) >= 16:
+                        live[h].append(fab.admit(h, 16))
+            except FMUnavailable:
+                pass
+        elif rng.random() < 0.5:
+            fab.fm.restart()
+        if rnd == rounds // 3 and crashed_host is None:
+            crashed_host = int(rng.integers(0, n_hosts))
+            fab.crash_host(crashed_host)
+        if rnd == (2 * rounds) // 3 and crashed_host is not None:
+            fab.rejoin_host(crashed_host)
+            crashed_host = None
+        for h in range(n_hosts):
+            if h != crashed_host and rng.random() < 0.7:
+                fab.deliver(h, int(rng.integers(1, 4)))
+        for (h, pid, start) in revoked:
+            if h == crashed_host:
+                continue
+            res = rts[h].check(_ext(pid, start), jnp.zeros(4, bool))
+            stale_reads += int(np.asarray(res.allowed).sum())
+
+    # recovery: storm passes; count barriers until full reconvergence
+    if crashed_host is not None:
+        fab.rejoin_host(crashed_host)
+    fab.quiesce()                      # flushes delayed copies via the plan
+    fab.fm.bus.faults = None
+    fab.fm.faults = None
+    def _converged() -> bool:
+        if any(rt.desynced for rt in rts):
+            return False
+        for (h, pid, start) in revoked:
+            res = rts[h].check(_ext(pid, start), jnp.zeros(4, bool))
+            if bool(np.asarray(res.allowed).any()):
+                return False
+        return True
+
+    recovery_rounds = 0
+    while recovery_rounds < 8:
+        recovery_rounds += 1
+        fab.fm.restart()               # idempotent snapshot resync
+        fab.quiesce()
+        if _converged():
+            break
+    converged = _converged()
+    st = fab.stats()["faults"]
+    return {
+        "seed": seed,
+        "stale_reads": stale_reads,
+        "recovery_rounds": recovery_rounds,
+        "converged": converged,
+        "revoked": len(revoked),
+        "dropped": plan.dropped,
+        "duplicated": plan.duplicated,
+        "delayed": plan.delayed,
+        "fm_crashes": plan.fm_crashes,
+        "fm_restarts": st["fm_restarts"],
+        "desync_events": st["desync_events"],
+        "self_heals": st["self_heals"],
+        "resyncs": st["resyncs"],
+        "snapshot_resyncs": st["snapshot_resyncs"],
+        "denied_desync": st["denied_desync"],
+    }
+
+
+def _nofault_fast_path(*, n_hosts: int, reps: int) -> dict:
+    """The common-case tax: fenced all-hit check latency and bus
+    publish+drain throughput with zero faults wired."""
+    fab = ShardedFabric(sdm_pages=1 << 14, table_capacity=2048,
+                        n_shards=n_hosts)
+    rts = [fab.enroll(h) for h in range(n_hosts)]
+    pid, start = fab.admit(0, 16)
+    fab.quiesce()
+    ext, wr = _ext(pid, start, 16), jnp.zeros(16, bool)
+    rts[0].check(ext, wr)              # warm: compile + fill the PermCache
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        res = rts[0].check(ext, wr)
+        jnp.asarray(res.allowed).block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fab.fm.vacuum()                # no tombstones: cheapest FM round
+    fab.fm.revoke_hwpid(pid)
+    fab.quiesce()
+    bus_s = time.perf_counter() - t0
+    return {
+        "check_hot_us": round(float(np.median(ts)) * 1e6, 2),
+        "fm_round_us": round(bus_s / (reps + 1) * 1e6, 2),
+        "desync_events": fab.stats()["faults"]["desync_events"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes for CI")
+    ap.add_argument("--seeds", type=int, default=5,
+                    help="chaos schedules to run (acceptance needs >= 5)")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--hosts", type=int, default=4)
+    ap.add_argument("--out", default="BENCH_faults.json")
+    args = ap.parse_args()
+    rounds = args.rounds or (9 if args.smoke else 14)
+
+    t0 = time.time()
+    matrix = [_run_chaos(seed, n_hosts=args.hosts, rounds=rounds)
+              for seed in range(1, args.seeds + 1)]
+    nofault = _nofault_fast_path(n_hosts=args.hosts,
+                                 reps=20 if args.smoke else 100)
+    result = {
+        "bench": "faults",
+        "smoke": args.smoke,
+        "hosts": args.hosts,
+        "rounds": rounds,
+        "matrix": matrix,
+        "nofault": nofault,
+        "headline": {
+            "seeds": len(matrix),
+            "stale_reads_total": sum(m["stale_reads"] for m in matrix),
+            "recovery_rounds_max": max(m["recovery_rounds"] for m in matrix),
+            "all_converged": float(all(m["converged"] for m in matrix)),
+            "dropped_total": sum(m["dropped"] for m in matrix),
+            "duplicated_total": sum(m["duplicated"] for m in matrix),
+            "delayed_total": sum(m["delayed"] for m in matrix),
+            "fm_crashes_total": sum(m["fm_crashes"] for m in matrix),
+            "desync_events_total": sum(m["desync_events"] for m in matrix),
+        },
+        "wall_s": round(time.time() - t0, 1),
+        "note": "stale_reads_total is THE acceptance number and must be 0; "
+                "recovery_rounds_max bounds reconvergence (one FM snapshot "
+                "broadcast resyncs the fabric, so > 1 means the snapshot "
+                "path broke); nofault records the common-case tax of the "
+                "sequence machinery",
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1, default=float)
+    print(json.dumps(result["headline"], indent=1, default=float))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,7 @@ Paper components -> modules:
 from .bus import BISnpBus
 from .cache import LruCache
 from .checker import (
+    FAULT_DESYNC,
     FAULT_NO_ABITS,
     FAULT_NO_ENTRY,
     FAULT_NONE,
@@ -22,13 +23,16 @@ from .checker import (
     binary_search,
     cached_check_access,
     check_access,
+    desync_check_result,
     invalidate_perm_cache,
     make_hwpid_local,
     make_perm_cache,
 )
 from .crypto import arx_mac32, arx_mac64, derive_key, hmac_label
 from .fabric import FabricView, HostRuntime, ShardedFabric, stack_views
-from .fm import BISnpEvent, FabricManager, Proposal
+from .faults import FaultPlan, FaultSpec, LinkFault
+from .fm import (BISnpEvent, FabricManager, FMUnavailable, JournalRecord,
+                 Proposal)
 from .pool import GatherResult, Region, SharedTensorPool, checked_gather
 from .space import RING_KERNEL, RING_USER, SpaceEngine
 from .table import (

@@ -56,7 +56,11 @@ from typing import Callable, TYPE_CHECKING
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (fm imports bus)
     from repro.memsim.clock import ClockedFabric
+    from .faults import FaultPlan
     from .fm import BISnpEvent
+
+# bounded error ledger: old entries roll off, `error_count` keeps the total
+ERROR_LEDGER_CAP = 256
 
 
 class BISnpBus:
@@ -69,9 +73,12 @@ class BISnpBus:
     """
 
     def __init__(self, *, max_lag: int | None = 64,
-                 clock: "ClockedFabric | None" = None):
+                 clock: "ClockedFabric | None" = None,
+                 max_handler_failures: int = 16):
         if max_lag is not None and max_lag < 1:
             raise ValueError("max_lag must be >= 1 (or None for unbounded)")
+        if max_handler_failures < 1:
+            raise ValueError("max_handler_failures must be >= 1")
         self.max_lag = max_lag
         self.clock = clock
         self._queues: dict[int, deque] = {}
@@ -79,7 +86,19 @@ class BISnpBus:
         self.published = 0
         self.delivered = 0
         self.forced_deliveries = 0   # events delivered by the lag bound
-        self.errors: list[tuple[int, object, BaseException]] = []
+        # last ERROR_LEDGER_CAP handler failures; error_count is the total
+        self.errors: deque = deque(maxlen=ERROR_LEDGER_CAP)
+        self.error_count = 0
+        # consecutive failures per host; quiesce() escalates a host whose
+        # handler keeps failing instead of silently spinning through it
+        self.max_handler_failures = max_handler_failures
+        self._consec_failures: dict[int, int] = {}
+        # fault injection hook (repro.core.faults.FaultPlan); None = lossless
+        self.faults: "FaultPlan | None" = None
+        # monotone per-bus sequence stamped onto each event at publish time —
+        # the per-host gap detector's ground truth (strictly stronger than
+        # epochs: one commit can publish several events at the same epoch)
+        self._next_seq = 0
         # clocked mode only: (epoch, host_id, publish_cycle, arrive_cycle)
         # appended at delivery time — the raw commit-propagation record
         self.timeline: list[tuple[int, int, int, int]] = []
@@ -113,24 +132,47 @@ class BISnpBus:
     def publish(self, ev: "BISnpEvent") -> None:
         """Enqueue `ev` on every attached host's queue, enforcing the lag
         bound by force-delivering each over-full host's OLDEST events first
-        (order preserved — the new event is always consumed last).  In
-        clocked mode each copy is additionally routed through the fabric
+        (order preserved — the new event is always consumed last).  Each
+        event is stamped with a monotone bus sequence number (the per-host
+        gap detector's ground truth).  A wired `FaultPlan` may drop,
+        duplicate, or hold back individual copies per host.  In clocked
+        mode each enqueued copy is additionally routed through the fabric
         model and its delivery scheduled at the computed arrival cycle."""
+        ev.seq = self._next_seq
+        self._next_seq += 1
         self.published += 1
         if self.tap is not None:
             self.tap(ev, len(self._queues))
         for host_id, q in self._queues.items():
-            q.append(ev)
-            if self.clock is not None:
-                t_pub = self.clock.now
-                arrive = self.clock.bisnp_send(host_id)
-                self.clock.schedule(
-                    arrive, lambda h=host_id, e=ev, t0=t_pub, t1=arrive:
-                    self._arrival(h, e, t0, t1))
+            if self.faults is not None:
+                for copy in self.faults.copies(host_id, ev):
+                    self._enqueue(host_id, copy)
+            else:
+                self._enqueue(host_id, ev)
             if self.max_lag is not None:
                 while len(q) > self.max_lag:
                     self.forced_deliveries += 1
                     self._deliver_one(host_id, q)
+
+    def _enqueue(self, host_id: int, ev: "BISnpEvent") -> None:
+        """Append one copy to a host queue (+ clocked-mode arrival)."""
+        self._queues[host_id].append(ev)
+        if self.clock is not None:
+            t_pub = self.clock.now
+            arrive = self.clock.bisnp_send(host_id)
+            self.clock.schedule(
+                arrive, lambda h=host_id, e=ev, t0=t_pub, t1=arrive:
+                self._arrival(h, e, t0, t1))
+
+    def _flush_stash(self, host_id: int) -> None:
+        """Re-enqueue any fault-plan-delayed copies for one host — called
+        before a drain/quiesce barrier so held-back copies cannot outlive
+        it (dropped copies are gone; the resync protocol owns those)."""
+        if self.faults is None:
+            return
+        for ev in self.faults.flush(host_id):
+            if host_id in self._queues:
+                self._enqueue(host_id, ev)
 
     def _arrival(self, host_id: int, ev: "BISnpEvent",
                  t_pub: int, t_arr: int) -> None:
@@ -152,6 +194,11 @@ class BISnpBus:
             self._handlers[host_id](ev)
         except Exception as exc:  # noqa: BLE001 - isolation is the point
             self.errors.append((host_id, ev, exc))
+            self.error_count += 1
+            self._consec_failures[host_id] = \
+                self._consec_failures.get(host_id, 0) + 1
+        else:
+            self._consec_failures[host_id] = 0
 
     def deliver(self, host_id: int, max_events: int | None = None) -> int:
         """Consume up to `max_events` (default: all) queued events at one
@@ -197,31 +244,53 @@ class BISnpBus:
         return n
 
     def drain(self, host_id: int | None = None) -> int:
-        """Deliver everything queued at one host (or, with None, at all).
-        Clocked mode advances the clock until the queue(s) empty."""
+        """Deliver everything queued at one host (or, with None, at all),
+        including any fault-plan-delayed copies (flushed first).  Clocked
+        mode advances the clock until the queue(s) empty."""
         if host_id is not None:
+            self._flush_stash(host_id)
             return self.deliver(host_id)
+        for h in tuple(self._queues):
+            self._flush_stash(h)
         return sum(self.deliver(h) for h in tuple(self._queues))
 
     def quiesce(self) -> int:
         """Fabric barrier: deliver until every queue is empty (handlers may
-        not publish, so one pass suffices; asserted).  After `quiesce()`
-        every attached host has observed every committed epoch.  In clocked
-        mode the barrier runs the clock to idle — `clock.now` afterwards is
-        when the LAST host observed the last commit (the fabric-wide
-        propagation horizon)."""
+        not publish, so one pass suffices; asserted), then escalate any
+        host whose handler failed `max_handler_failures` consecutive
+        deliveries — a permanently-broken consumer must surface at the
+        barrier, not spin silently through the error ledger.  Absent
+        faults, every attached host has then observed every committed
+        epoch (under drop faults a host may instead be desynced and
+        fail-closed — see docs/faults.md).  In clocked mode the barrier
+        runs the clock to idle — `clock.now` afterwards is when the LAST
+        host observed the last commit (the fabric-wide propagation
+        horizon)."""
         if self.clock is not None:
+            for h in tuple(self._queues):
+                self._flush_stash(h)
             before = self.delivered
             self.clock.clock.run()
             if any(self._queues.values()):
                 raise RuntimeError("bus handlers must not publish during "
                                    "delivery — quiesce barrier violated")
+            self._check_handler_health()
             return self.delivered - before
         n = self.drain()
         if any(self._queues.values()):
             raise RuntimeError("bus handlers must not publish during "
                                "delivery — quiesce barrier violated")
+        self._check_handler_health()
         return n
+
+    def _check_handler_health(self) -> None:
+        """Raise if any host's handler failed too many times in a row."""
+        for host_id, n in self._consec_failures.items():
+            if n >= self.max_handler_failures:
+                raise RuntimeError(
+                    f"host {host_id} snoop handler failed {n} consecutive "
+                    f"deliveries (>= max_handler_failures="
+                    f"{self.max_handler_failures}) — consumer is wedged")
 
     # -- introspection -------------------------------------------------------
     def lag(self, host_id: int) -> int:

@@ -34,6 +34,7 @@ FAULT_NO_ABITS = 1        # untagged access to SDM (untrusted process)
 FAULT_NOT_LOCAL = 2       # HWPID not in HWPID_local (wrong host / revoked)
 FAULT_NO_ENTRY = 3        # no permission entry covers the address
 FAULT_PERM = 4            # entry found but R/W bits deny the access
+FAULT_DESYNC = 5          # host lost BISnp events — fail closed until resync
 
 
 class CheckResult(NamedTuple):
@@ -42,6 +43,21 @@ class CheckResult(NamedTuple):
     fault: jax.Array        # i32[B] fault codes
     entry_idx: jax.Array    # i32[B] matched entry (-1 if none)
     probes: jax.Array       # i32[B] binary-search probe count (occupancy stats)
+
+
+def desync_check_result(n_accesses: int) -> CheckResult:
+    """The fail-closed verdict: deny every access with `FAULT_DESYNC`.
+
+    A host that detected a BISnp sequence gap (or sits in quarantine) can
+    no longer trust ANY cached or freshly-derived grant — a lost event may
+    have revoked exactly the page it is about to serve — so its checker
+    answers this instead of consulting the table at all.  Zero probes,
+    no cache traffic: the deny is free, the stall is the point."""
+    return CheckResult(
+        allowed=jnp.zeros((n_accesses,), jnp.bool_),
+        fault=jnp.full((n_accesses,), FAULT_DESYNC, jnp.int32),
+        entry_idx=jnp.full((n_accesses,), -1, jnp.int32),
+        probes=jnp.zeros((n_accesses,), jnp.int32))
 
 
 def binary_search(starts: jax.Array, n: jax.Array, pages: jax.Array):

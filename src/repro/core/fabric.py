@@ -61,9 +61,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from .checker import (PERM_CACHE_BYTES, cached_check_access_jit,
-                      invalidate_perm_cache, make_hwpid_local,
-                      make_perm_cache)
-from .fm import BISnpEvent, FabricManager, Proposal
+                      desync_check_result, invalidate_perm_cache,
+                      make_hwpid_local, make_perm_cache)
+from .fm import BISnpEvent, FabricManager, FMUnavailable, Proposal
 from .table import EMPTY_START, PERM_RW, PermissionTable, _NO_END
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -92,11 +92,30 @@ class HostRuntime:
         self.page_hi = page_hi
         self._extra_ranges: list[tuple[int, int]] = []
         self.hwpids: set[int] = set()
+        self.perm_cache_bytes = perm_cache_bytes
         self.permcache = make_perm_cache(perm_cache_bytes,
                                          epoch=fabric.fm.epoch)
         self.views = _permcheck_mod().ShardViewCache()
         self.bisnp_seen = 0
         self.shard_rebuilds = 0
+        # BISnp loss recovery (docs/faults.md): the bus stamps a monotone
+        # sequence on every event; a hole in the per-host stream means a
+        # copy was lost and the host FAILS CLOSED (check() denies with
+        # FAULT_DESYNC) until a late reordered copy fills the hole or a
+        # resync against the FM rebuilds the view
+        self._expected_seq = fabric.fm.bus._next_seq
+        self._missing: set[int] = set()
+        self.quarantined = False
+        self.crashed = False
+        self.max_resync_attempts = 6
+        self.desync_events = 0    # sequence gaps detected
+        self.self_heals = 0       # gaps closed by late reordered copies
+        self.resyncs = 0          # successful FM point-resyncs
+        self.snapshot_resyncs = 0  # recoveries via FM snapshot broadcast
+        self.denied_desync = 0    # check() batches denied fail-closed
+        self._resync_ticks = 0    # check() calls since the last attempt
+        self._resync_wait = 1     # current backoff, in check() calls
+        self._resync_attempts = 0
         self._shard: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None
         self._shard_idx: np.ndarray | None = None  # kept global indices
         self._shard_epoch = -1
@@ -114,11 +133,91 @@ class HostRuntime:
         index mapping on every host.  Correctness does not depend on this
         drop — `_resident_entries` diffs the kept-index set per epoch and
         flushes whenever this host's local ranks actually moved, and
-        extraction precedes every fenced probe (see module docstring)."""
+        extraction precedes every fenced probe (see module docstring).
+
+        Sequence tracking (docs/faults.md): before applying, the event's
+        bus sequence is matched against this host's expected stream.  A
+        hole (lost copy) records the missing sequences and desyncs the
+        host — `check()` then fails closed; a late copy that fills the
+        last hole heals the desync on the spot (pure reordering loses
+        nothing); a `snapshot=True` event rebuilds the whole view."""
         self.bisnp_seen += 1
+        if self.fabric.host_monitor is not None:
+            self.fabric.host_monitor.beat(self.host_id)
+        if ev.snapshot:
+            self._apply_snapshot(ev)
+            return
+        if ev.seq >= 0:
+            if ev.seq == self._expected_seq:
+                self._expected_seq += 1
+            elif ev.seq > self._expected_seq:
+                self._missing.update(range(self._expected_seq, ev.seq))
+                self._expected_seq = ev.seq + 1
+                self.desync_events += 1
+            else:
+                # replay/duplicate/late copy: if it fills a recorded hole
+                # the "loss" was reordering — every effect has now been
+                # applied, so the fail-closed window can end immediately
+                if ev.seq in self._missing:
+                    self._missing.discard(ev.seq)
+                    if not self._missing and not self.quarantined:
+                        self.self_heals += 1
+                        self._reset_backoff()
         self.permcache = invalidate_perm_cache(
             self.permcache, ev.start_page, ev.n_pages, ev.epoch,
             min_shifted_entry=ev.min_entry_idx)
+
+    # -- loss recovery (fail closed, then resync) ----------------------------
+    @property
+    def desynced(self) -> bool:
+        """True while this host cannot trust its view: a sequence hole is
+        outstanding or the host exhausted its resync attempts
+        (quarantined).  `check()` denies everything while True."""
+        return bool(self._missing) or self.quarantined
+
+    def _reset_backoff(self) -> None:
+        self._resync_ticks = 0
+        self._resync_wait = 1
+        self._resync_attempts = 0
+
+    def _apply_snapshot(self, ev: BISnpEvent) -> None:
+        """Consume an FM snapshot-resync broadcast: drop the whole cache,
+        fence at the snapshot epoch, fast-forward the expected sequence,
+        and clear any desync or quarantine — the device-resident table is
+        re-read by the next shard extraction, so nothing else is needed."""
+        self.snapshot_resyncs += 1
+        self._missing.clear()
+        self.quarantined = False
+        self._reset_backoff()
+        if ev.seq >= 0:
+            self._expected_seq = ev.seq + 1
+        self.permcache = make_perm_cache(self.perm_cache_bytes,
+                                         epoch=ev.epoch)
+
+    def _try_resync(self) -> None:
+        """One backoff tick toward an FM point-resync.  Retries are paced
+        in check() calls (the host's own clock under fail-closed stall):
+        attempt, and on `FMUnavailable` double the wait — after
+        `max_resync_attempts` consecutive failures the host quarantines
+        itself (only an FM snapshot broadcast or `rejoin_host` clears
+        that)."""
+        self._resync_ticks += 1
+        if self._resync_ticks < self._resync_wait:
+            return
+        self._resync_ticks = 0
+        self._resync_attempts += 1
+        try:
+            epoch, next_seq = self.fabric.fm.sync_host(self.host_id)
+        except FMUnavailable:
+            self._resync_wait = min(self._resync_wait * 2, 4096)
+            if self._resync_attempts >= self.max_resync_attempts:
+                self.quarantined = True
+            return
+        self._missing.clear()
+        self._expected_seq = next_seq
+        self.permcache = make_perm_cache(self.perm_cache_bytes, epoch=epoch)
+        self._reset_backoff()
+        self.resyncs += 1
 
     # -- resident shard ------------------------------------------------------
     def add_resident_range(self, start_page: int, n_pages: int) -> None:
@@ -248,7 +347,23 @@ class HostRuntime:
     def check(self, ext_addrs, is_write):
         """Framework permission check against the resident shard through
         this host's fenced PermCache.  Returns the CheckResult; the cache is
-        threaded internally."""
+        threaded internally.
+
+        Fail-closed gate: a desynced host (outstanding BISnp sequence hole
+        or quarantine) answers a uniform `FAULT_DESYNC` deny WITHOUT
+        consulting table or cache — a lost event may have revoked exactly
+        the page being served.  Each denied batch also ticks the resync
+        backoff, so a stalled-but-checking host works its own way back."""
+        if self.fabric.host_monitor is not None:
+            self.fabric.host_monitor.beat(self.host_id)
+        if self.crashed:
+            raise RuntimeError(f"host {self.host_id} is crashed — "
+                               f"rejoin_host() first")
+        if self.desynced and not self.quarantined:
+            self._try_resync()
+        if self.desynced:
+            self.denied_desync += 1
+            return desync_check_result(int(jnp.asarray(ext_addrs).shape[-1]))
         table = self.shard_table()
         res, self.permcache = cached_check_access_jit(
             table, self.hwpid_local(), ext_addrs, is_write, self.permcache)
@@ -359,6 +474,8 @@ class ShardedFabric:
         # timing-trace recorder (repro.memsim.replay.FabricTrace); set by
         # begin_trace(), consumed by end_trace() — None = not recording
         self._trace = None
+        # heartbeat crash detector (enable_host_monitor); None = off
+        self.host_monitor = None
 
     # -- topology ------------------------------------------------------------
     def shard_range(self, host_id: int) -> tuple[int, int]:
@@ -509,6 +626,75 @@ class ShardedFabric:
         """Deliver every queued BISnp at every host (fabric barrier)."""
         return self.fm.bus.quiesce()
 
+    # -- faults, crash, rejoin (docs/faults.md) ------------------------------
+    def inject_faults(self, plan) -> "object":
+        """Wire a `repro.core.faults.FaultPlan` into every fault point this
+        deployment owns: the bus (message drop/dup/reorder/delay), the FM
+        (scheduled crash between journal append and broadcast), and — in
+        clocked mode — the per-host downlinks (degradation/outages).
+        Returns the plan for chaining."""
+        self.fm.bus.faults = plan
+        self.fm.faults = plan
+        if self.fm.bus.clock is not None:
+            plan.apply_link_faults(self.fm.bus.clock)
+        return plan
+
+    def crash_host(self, host_id: int) -> None:
+        """Fail-stop one host: detach it from the bus (its queued events
+        die with it — real snoop queues are host DRAM) and brick its
+        runtime (`check()` raises until `rejoin_host`).  Its table entries
+        survive: grants belong to the FM, not the host."""
+        rt = self.runtimes[host_id]
+        if rt.crashed:
+            raise ValueError(f"host {host_id} already crashed")
+        rt.crashed = True
+        self.fm.bus.detach(host_id)
+        if self.host_monitor is not None:
+            self.host_monitor.forget(host_id)
+
+    def rejoin_host(self, host_id: int) -> None:
+        """Bring a crashed host back cold: fresh (empty) PermCache fenced
+        at the live epoch, expected sequence fast-forwarded to the bus's
+        next stamp, desync/quarantine cleared, every derived-view memo
+        dropped, and the bus re-attached.  Cold is always safe — the first
+        checks re-extract the shard from the device-resident table and
+        miss into it."""
+        rt = self.runtimes[host_id]
+        if not rt.crashed:
+            raise ValueError(f"host {host_id} is not crashed")
+        rt.crashed = False
+        rt.quarantined = False
+        rt._missing.clear()
+        rt._reset_backoff()
+        rt._expected_seq = self.fm.bus._next_seq
+        rt.permcache = make_perm_cache(rt.perm_cache_bytes,
+                                       epoch=self.fm.epoch)
+        rt._shard_epoch = -1
+        rt.views = _permcheck_mod().ShardViewCache()
+        self._fabric_view_key = None
+        self.fm.bus.attach(host_id, rt.on_bisnp)
+        if self.host_monitor is not None:
+            self.host_monitor.beat(host_id)
+
+    def enable_host_monitor(self, *, timeout: float, clock=None):
+        """Attach a heartbeat-based crash detector (the `FailureDetector`
+        protocol from `repro.runtime.fault_tolerance`, deterministic under
+        an injected clock): every delivered BISnp and every `check()` beat
+        the host's entry; `dead_hosts()` lists hosts silent for longer
+        than `timeout`.  Returns the detector."""
+        from repro.runtime.fault_tolerance import FailureDetector
+        self.host_monitor = FailureDetector(timeout=timeout, clock=clock)
+        for h in self.runtimes:
+            self.host_monitor.beat(h)
+        return self.host_monitor
+
+    def dead_hosts(self) -> list[int]:
+        """Hosts the heartbeat monitor considers crashed (empty when no
+        monitor is attached — call `enable_host_monitor` first)."""
+        if self.host_monitor is None:
+            return []
+        return self.host_monitor.dead()
+
     # -- batched cross-host egress -------------------------------------------
     def fabric_rows(self, hwpid_by_host: dict) -> list[tuple[int, int]]:
         """Flatten a tenant assignment — ``{host: hwpid}`` or
@@ -614,7 +800,23 @@ class ShardedFabric:
             "bus": {"published": bus.published, "delivered": bus.delivered,
                     "forced": bus.forced_deliveries,
                     "max_lag": bus.max_observed_lag(),
-                    "errors": len(bus.errors)},
+                    "errors": len(bus.errors),
+                    "error_count": bus.error_count},
+            "faults": {
+                "desynced": sum(rt.desynced for rt in self.runtimes.values()),
+                "quarantined": sum(rt.quarantined
+                                   for rt in self.runtimes.values()),
+                "crashed": sum(rt.crashed for rt in self.runtimes.values()),
+                "desync_events": sum(rt.desync_events
+                                     for rt in self.runtimes.values()),
+                "self_heals": sum(rt.self_heals
+                                  for rt in self.runtimes.values()),
+                "resyncs": sum(rt.resyncs for rt in self.runtimes.values()),
+                "snapshot_resyncs": sum(rt.snapshot_resyncs
+                                        for rt in self.runtimes.values()),
+                "denied_desync": sum(rt.denied_desync
+                                     for rt in self.runtimes.values()),
+                "fm_restarts": self.fm.restarts},
             "shard_rebuilds": {h: rt.shard_rebuilds
                                for h, rt in self.runtimes.items()},
             # as of each host's last extraction (-1 = never extracted);

@@ -55,11 +55,42 @@ class BISnpEvent:
     """One back-invalidate broadcast: pages whose permission mapping changed
     at `epoch`.  `min_entry_idx` (when set) is the smallest table index whose
     position shifted in the commit — caches storing entry indices must also
-    drop mappings at/after it (see `HostTable.CommitInfo`)."""
+    drop mappings at/after it (see `HostTable.CommitInfo`).
+
+    `seq` is stamped by the bus at publish time (monotone per bus) — the
+    per-host gap detector's ground truth, strictly stronger than the epoch
+    (one commit broadcasts one event PER dirty range, all sharing an epoch,
+    so an epoch gap cannot reveal a lost event inside a multi-range
+    commit).  `snapshot=True` marks a full-state resync broadcast (FM
+    restart / recovery): consumers drop their whole cache, fast-forward
+    their fence and expected sequence to it, and clear any desync or
+    quarantine (see docs/faults.md)."""
     start_page: int
     n_pages: int
     epoch: int = 0
     min_entry_idx: int | None = None
+    seq: int = -1
+    snapshot: bool = False
+
+
+class FMUnavailable(RuntimeError):
+    """Raised by FM control APIs while the FM is crashed (pre-`restart`)."""
+
+
+@dataclass
+class JournalRecord:
+    """One write-ahead commit journal entry (appended BEFORE broadcast).
+
+    Compact by design — it holds only what the device-resident table
+    cannot re-derive for a restarted FM: the dirty ranges still owed to
+    the fabric (`broadcast` flips once the BISnp fan-out completes) and
+    the FM-volatile HWPID-liveness ops (`hwpid_ops`: ("add"|"discard",
+    hwpid) pairs rebuilding `hwpid_global`)."""
+    epoch: int
+    ranges: tuple[tuple[int, int], ...]
+    min_entry_idx: int | None
+    hwpid_ops: tuple[tuple[str, int], ...] = ()
+    broadcast: bool = False
 
 
 class FabricManager:
@@ -89,11 +120,26 @@ class FabricManager:
         # FM-level side effects (hwpid_global, L_exp install, audit) staged
         # while a transaction is open; applied on commit, dropped on abort
         self._txn_effects: list[Callable[[], None]] = []
+        # write-ahead commit journal: a record is appended after the table
+        # commit and BEFORE the broadcast, so a crash in between leaves a
+        # durable record of what the fabric is still owed (restart()
+        # re-broadcasts every record with broadcast=False)
+        self.journal: list[JournalRecord] = []
+        # HWPID-liveness ops accumulated since the last commit; folded into
+        # that commit's journal record (cleared on abort)
+        self._pending_hwpid_ops: list[tuple[str, int]] = []
+        self.crashed = False
+        self.restarts = 0
+        # fault injection hook (repro.core.faults.FaultPlan): checked after
+        # the journal append, before the broadcast — the lost-broadcast
+        # window the journal exists for.  None = never crashes.
+        self.faults = None
 
     # -- host enrolment --------------------------------------------------------
     def enroll_host(self, host_id: int, n_cores: int = 8) -> SpaceEngine:
         """Derive K_host and hand the host a SpaceEngine drawing HWPIDs
         from the deployment-wide pool (up to 255 hosts, paper abstract)."""
+        self._require_alive()
         if host_id in self.hosts:
             raise ValueError(f"host {host_id} already enrolled")
         if len(self.hosts) >= 255:
@@ -125,6 +171,7 @@ class FabricManager:
         """Coalesce several grant/revoke operations into ONE table commit —
         one epoch bump, one BISnp broadcast covering the union dirty range.
         Nested transactions are flattened into the outermost one."""
+        self._require_alive()
         if self._txn_depth:
             self._txn_depth += 1
             try:
@@ -139,6 +186,7 @@ class FabricManager:
         except BaseException:
             self.table.abort()
             self._txn_effects.clear()
+            self._pending_hwpid_ops.clear()
             raise
         finally:
             self._txn_depth -= 1
@@ -154,9 +202,21 @@ class FabricManager:
         info = self.table.commit()
         if info is not None:
             ranges = info.ranges or ((info.start_page, info.n_pages),)
+            # write-ahead: the journal learns about this commit before any
+            # host does, so a crash mid-broadcast cannot lose it
+            rec = JournalRecord(epoch=info.epoch, ranges=tuple(ranges),
+                                min_entry_idx=info.min_shifted_entry,
+                                hwpid_ops=tuple(self._pending_hwpid_ops))
+            self._pending_hwpid_ops.clear()
+            self.journal.append(rec)
+            if self.faults is not None and \
+                    self.faults.should_crash_fm(info.epoch):
+                self.crash()   # journaled but never broadcast — the
+                return info    # restart path owes the fabric this record
             for start, n in ranges:
                 self._broadcast(BISnpEvent(start, n, epoch=info.epoch,
                                            min_entry_idx=info.min_shifted_entry))
+            rec.broadcast = True
         return info
 
     def _mutate_table(self, fn):
@@ -169,6 +229,7 @@ class FabricManager:
             ret = fn()
         except BaseException:
             self.table.abort()
+            self._pending_hwpid_ops.clear()
             raise
         self._commit_and_broadcast()
         return ret
@@ -184,6 +245,7 @@ class FabricManager:
     # -- proposal -> approve -> commit -> label (Fig. 2 workflow) --------------
     def propose(self, p: Proposal) -> int | None:
         """Returns L_exp on approval, None on rejection."""
+        self._require_alive()
         if p.host_id not in self.hosts:
             self.audit_log.append(f"REJECT unknown host {p.host_id}")
             return None
@@ -196,7 +258,10 @@ class FabricManager:
         if not self._policy(p):
             self.audit_log.append(f"REJECT policy {p}")
             return None
-        # Commit: FM optimizes/coalesces overlapping entries (paper §4.1.1)
+        # Commit: FM optimizes/coalesces overlapping entries (paper §4.1.1).
+        # The HWPID-liveness op is queued first so the commit's journal
+        # record carries it (write-ahead for the FM-volatile state too).
+        self._pending_hwpid_ops.append(("add", p.hwpid))
         self._mutate_table(lambda: self.table.insert(
             p.start_page, p.n_pages, perm_words_for({p.hwpid: p.perm}),
             owner_host=p.host_id))
@@ -223,6 +288,8 @@ class FabricManager:
         """Revocation: clear permissions, drop empty entries, and BISnp all
         hosts with the commit's actual dirty range (targeted — hosts keep
         every cached mapping the revoke did not touch)."""
+        self._require_alive()
+        self._pending_hwpid_ops.append(("discard", hwpid))
         self._mutate_table(lambda: self.table.remove_hwpid(hwpid))
         self._stage_effect(lambda: (
             self._hwpid_global.discard(hwpid),
@@ -231,6 +298,7 @@ class FabricManager:
     def release_range(self, hwpid: int, start_page: int, n_pages: int) -> None:
         """Partial release: revoke one HWPID's grant over a page range only
         (region release on tenant eviction), leaving its other grants live."""
+        self._require_alive()
         self._mutate_table(
             lambda: self.table.revoke_range(start_page, n_pages, hwpid))
         self._stage_effect(lambda: self.audit_log.append(
@@ -249,12 +317,77 @@ class FabricManager:
         """Compact revocation tombstones out of the table (deliberate
         maintenance; shifts entry indices, so the broadcast carries
         min_entry_idx and caches drop shifted mappings)."""
+        self._require_alive()
         self._mutate_table(self.table.vacuum)
         self._stage_effect(lambda: self.audit_log.append("VACUUM"))
 
     def hwpid_global(self) -> set[int]:
         """HWPID_global = union over hosts (paper §4.2.2)."""
         return set(self._hwpid_global)
+
+    # -- crash / restart / resync (fail-closed control plane) ------------------
+    def _require_alive(self) -> None:
+        """Every FM control API starts here: a crashed FM answers nothing."""
+        if self.crashed:
+            raise FMUnavailable("fabric manager is down (crash pending "
+                                "restart) — retry with backoff")
+
+    def crash(self) -> None:
+        """Kill the FM process model: volatile state (`hwpid_global`) is
+        gone; the permission table survives (it lives in device memory, not
+        the FM); the bus keeps delivering already-published copies (they
+        are on the wire, not in the FM).  All control APIs raise
+        `FMUnavailable` until `restart()`."""
+        self.crashed = True
+        self._hwpid_global = set()
+        self._pending_hwpid_ops.clear()
+        self.audit_log.append("FM-CRASH")
+
+    def restart(self) -> None:
+        """Recover a crashed FM from durable state.
+
+        Three steps, in order: (1) replay the journal's HWPID-liveness ops
+        to re-derive `hwpid_global` (epoch and tombstones need no replay —
+        they are read straight from the device-resident table); (2)
+        re-broadcast every journal record whose fan-out never completed
+        (fresh event objects, fresh bus sequence numbers — duplicates are
+        harmless, consumers treat a replayed epoch as a targeted drop);
+        (3) publish one full-range `snapshot=True` resync event that any
+        gapped, quarantined, or rejoining host uses to rebuild its view.
+        Idempotent: restarting a live FM only re-publishes the snapshot."""
+        self.crashed = False
+        self.restarts += 1
+        rebuilt: set[int] = set()
+        for rec in self.journal:
+            for op, hwpid in rec.hwpid_ops:
+                (rebuilt.add if op == "add" else rebuilt.discard)(hwpid)
+        self._hwpid_global = rebuilt
+        self.audit_log.append(
+            f"FM-RESTART epoch={self.table.epoch} "
+            f"hwpids={len(rebuilt)} journal={len(self.journal)}")
+        for rec in self.journal:
+            if not rec.broadcast:
+                for start, n in rec.ranges:
+                    self._broadcast(BISnpEvent(
+                        start, n, epoch=rec.epoch,
+                        min_entry_idx=rec.min_entry_idx))
+                rec.broadcast = True
+        self._broadcast(BISnpEvent(0, self.sdm_pages,
+                                   epoch=self.table.epoch, snapshot=True))
+
+    def sync_host(self, host_id: int) -> tuple[int, int]:
+        """Point resync for one gapped host (the retry/backoff target):
+        returns ``(epoch, next_seq)`` — the live table epoch to fence the
+        host's rebuilt (empty) cache at, and the bus sequence number the
+        host should expect next.  Copies already queued for the host carry
+        older sequences and degrade to harmless replay drops.  Raises
+        `FMUnavailable` while crashed — that is what the host's bounded
+        exponential backoff is for."""
+        self._require_alive()
+        if host_id not in self.bus.hosts and host_id not in self.hosts:
+            raise ValueError(f"host {host_id} not attached")
+        self.audit_log.append(f"SYNC host={host_id} epoch={self.table.epoch}")
+        return self.table.epoch, self.bus._next_seq
 
     def _broadcast(self, ev: BISnpEvent) -> None:
         """Fan one committed event out to BOTH delivery planes.

@@ -48,7 +48,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, smoke_config
-from repro.core import FAULT_NONE, SharedTensorPool, pack_ext_addr
+from repro.core import (FAULT_DESYNC, FAULT_NONE, SharedTensorPool,
+                        pack_ext_addr)
 from repro.core.fabric import ShardedFabric
 from repro.core.table import PAGE_BYTES
 from repro.models import registry
@@ -101,6 +102,10 @@ class ServeEngine:
             lambda p, c, t, pos: registry.decode_step(cfg, p, c, t, pos))
         self.faults = 0
         self.steps = 0
+        # fail-closed stalls: step ticks where a tenant's host was desynced
+        # (lost BISnp events) and denied the batch WITHOUT aborting the
+        # group — the tenant retries next tick and recovers after resync
+        self.stalls = 0
 
     # -- observability ---------------------------------------------------------
     @property
@@ -121,12 +126,16 @@ class ServeEngine:
     def view_stats(self) -> dict:
         """Aggregate view-memo counters (kernel-operand derivation): the
         fabric's stacked-view memo plus each host's per-tenant ShardView
-        cache behind it."""
+        cache behind it — plus the control-plane health counters the bus
+        used to swallow (`error_count` is total handler failures ever;
+        `stalls` is fail-closed desync ticks absorbed by the engine)."""
         return {
             "rebuilds": self.fabric.view_rebuilds
             + sum(rt.views.rebuilds for rt in self.fabric.runtimes.values()),
             "reuses": self.fabric.view_reuses
             + sum(rt.views.reuses for rt in self.fabric.runtimes.values()),
+            "error_count": self.fm.bus.error_count,
+            "stalls": self.stalls,
         }
 
     # -- tenancy ---------------------------------------------------------------
@@ -246,6 +255,15 @@ class ServeEngine:
         for name, t in list(self.tenants.items()):
             if only is not None and name != only:
                 continue
+            if self.fabric.runtimes[t.host_id].crashed:
+                # fail-stop host: its tenants stall (queued + in-flight
+                # work held) until rejoin_host brings it back cold
+                if t.queue or t.group is not None:
+                    self.stalls += 1
+                    t.last_fault = FAULT_DESYNC
+                    results[name] = {"aborted": False, "stalled": True,
+                                     "fault": FAULT_DESYNC, "retired": 0}
+                continue
             if t.group is None:
                 if not t.queue:
                     continue
@@ -257,31 +275,54 @@ class ServeEngine:
         if not active:
             return results
         # phase 2: close each involved host's BISnp fence up to the table
-        # epoch it is about to check against (no fabric-wide quiesce)
+        # epoch it is about to check against (no fabric-wide quiesce).
+        # Crashed hosts are detached from the bus — nothing to close there
+        # (their tenants raise/stall in phase 3/4, not here).
         for host_id in {t.host_id for t, _ in active}:
-            self.fm.bus.deliver_until(host_id, self.fm.epoch)
+            if host_id in self.fm.bus.hosts:
+                self.fm.bus.deliver_until(host_id, self.fm.epoch)
         # phase 3: framework egress check per tenant, through the host's
-        # fenced PermCache and resident shard (THE checked egress path)
+        # fenced PermCache and resident shard (THE checked egress path).
+        # A desynced host answers a uniform FAULT_DESYNC deny here.
         checks = [self.fabric.runtimes[t.host_id].check(
             ext, jnp.ones(ext.shape, bool)) for t, ext in active]
         if self.fused_egress:
             # device-level egress: one batched launch for all tenants; the
-            # kernel's fault lanes must agree with the framework verdicts
-            for (t, _), chk, kfault in zip(
-                    active, checks, self._fused_step_egress(active)):
-                if not bool(jnp.all((kfault > 0) == ~chk.allowed)):
-                    raise AssertionError(
-                        "fused kernel and cached checker disagree for "
-                        f"tenant {t.name}")
+            # kernel's fault lanes must agree with the framework verdicts.
+            # Desynced hosts are excluded — their deny is a control-plane
+            # stall, not a permission verdict, and the kernel (which only
+            # knows the table) cannot be expected to reproduce it.
+            fusable = [(t, e) for t, e in active
+                       if not self.fabric.runtimes[t.host_id].desynced]
+            if fusable:
+                chk_by_name = {t.name: chk
+                               for (t, _), chk in zip(active, checks)}
+                for (t, _), kfault in zip(fusable,
+                                          self._fused_step_egress(fusable)):
+                    chk = chk_by_name[t.name]
+                    if not bool(jnp.all((kfault > 0) == ~chk.allowed)):
+                        raise AssertionError(
+                            "fused kernel and cached checker disagree for "
+                            f"tenant {t.name}")
         # phase 4: enforce verdicts, decode survivors
         for (t, _), chk in zip(active, checks):
             if not bool(chk.allowed.all()):
+                fault = int(np.asarray(chk.fault).max())
+                if fault == FAULT_DESYNC:
+                    # fail-closed stall: the host lost BISnp events, so it
+                    # denies everything until it resyncs.  The in-flight
+                    # group is NOT aborted — it stalls in place and retries
+                    # next tick; co-resident hosts are untouched.
+                    self.stalls += 1
+                    t.last_fault = fault
+                    results[t.name] = {"aborted": False, "stalled": True,
+                                       "fault": fault, "retired": 0}
+                    continue
                 # response-side enforcement: the denied KV lines read as
                 # zero and the tenant's in-flight group aborts
-                fault = int(np.asarray(chk.fault).max())
                 self._abort_group(t, fault)
-                results[t.name] = {"aborted": True, "fault": fault,
-                                   "retired": 0}
+                results[t.name] = {"aborted": True, "stalled": False,
+                                   "fault": fault, "retired": 0}
                 continue
             logits, t.cache = self._decode(
                 self.params, t.cache, t.cur,
@@ -300,8 +341,8 @@ class ServeEngine:
                 retired = len(t.group)
                 t.group = None
                 t.cache = None
-            results[t.name] = {"aborted": False, "fault": FAULT_NONE,
-                               "retired": retired}
+            results[t.name] = {"aborted": False, "stalled": False,
+                               "fault": FAULT_NONE, "retired": retired}
         return results
 
     def has_work(self, only: str | None = None) -> bool:

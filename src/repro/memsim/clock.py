@@ -154,15 +154,33 @@ class Link:
         self.wait_cycles = 0
         self.msgs = 0
         self.max_queue_cycles = 0
+        # fault primitives (repro.core.faults.LinkFault installs these):
+        # degrade_factor multiplies serializer occupancy (2.0 = the link
+        # runs at half bandwidth); outages are [start, end) cycle windows
+        # during which the serializer admits nothing — a message arriving
+        # mid-outage queues until the window closes
+        self.degrade_factor = 1.0
+        self.outages: list[tuple[int, int]] = []
+        self.outage_waits = 0
 
     def occupancy(self, nbytes: int) -> int:
-        """Serializer occupancy in whole cycles for one `nbytes` message."""
-        return max(1, int(round(nbytes * self._per_byte)))
+        """Serializer occupancy in whole cycles for one `nbytes` message
+        (scaled by the fault layer's `degrade_factor` when installed)."""
+        return max(1, int(round(nbytes * self._per_byte
+                                * self.degrade_factor)))
+
+    def _defer_past_outages(self, start: int) -> int:
+        """Earliest cycle >= `start` outside every outage window."""
+        for lo, hi in sorted(self.outages):
+            if lo <= start < hi:
+                self.outage_waits += 1
+                start = hi
+        return start
 
     def send(self, now: int, nbytes: int) -> int:
         """Enqueue one message at `now`; returns its arrival cycle."""
         occ = self.occupancy(nbytes)
-        start = max(int(now), self.busy_until)
+        start = self._defer_past_outages(max(int(now), self.busy_until))
         wait = start - int(now)
         self.busy_until = start + occ
         self.busy_cycles += occ
@@ -183,7 +201,7 @@ class Link:
         if n_msgs <= 0:
             return int(now)
         occ = self.occupancy(nbytes)
-        start = max(int(now), self.busy_until)
+        start = self._defer_past_outages(max(int(now), self.busy_until))
         self.wait_cycles += start - int(now)
         self.max_queue_cycles = max(self.max_queue_cycles, start - int(now))
         self.busy_until = start + occ * n_msgs

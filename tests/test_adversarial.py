@@ -324,3 +324,138 @@ def test_aliasing_across_ways_targeted_bisnp():
     # targeted invalidation); only the attacker lane pays the miss
     probes = np.asarray(r3.probes)
     assert int(probes[:3].sum()) == 0 and int(probes[3]) > 0
+
+
+# ---------------------------------------------------------------------------
+# faulted BISnp streams (docs/faults.md): suppression / replay / duplication
+# ---------------------------------------------------------------------------
+
+from repro.core import FaultPlan, FaultSpec, ShardedFabric  # noqa: E402
+
+
+class _TargetedDrop(FaultPlan):
+    """Suppresses exactly the copies covering one page on one host — an
+    adversary (or a deterministic test) picking WHICH event of a
+    multi-range commit to lose, which a seeded probabilistic plan cannot
+    target reliably."""
+
+    def __init__(self, host_id: int, page: int):
+        super().__init__(FaultSpec())
+        self._host = host_id
+        self._page = page
+
+    def copies(self, host_id, ev):
+        if host_id == self._host and \
+                ev.start_page <= self._page < ev.start_page + ev.n_pages:
+            self.dropped += 1
+            return []
+        return [ev]
+
+
+def test_partial_multirange_drop_fails_closed_not_stale():
+    """THE hazard the bus sequence numbers exist for: one revocation commit
+    with two dirty ranges broadcasts two events at the SAME epoch.  An
+    adversary who suppresses only one of them lets the other close the
+    epoch fence (cache.epoch == table.epoch) — and a fence-trusting cache
+    would then serve the suppressed range's stale grant forever, because
+    no later event ever mentions that range again.  Sequence-gap detection
+    catches the hole regardless of epochs: the host fails closed, resyncs,
+    and serves live verdicts."""
+    fab = ShardedFabric(sdm_pages=1 << 14, table_capacity=2048, n_shards=1)
+    rt = fab.enroll(0)
+    pid, start_a = fab.admit(0, 8)
+    other, start_o = fab.admit(0, 8)   # untouched entry BETWEEN the victim's
+    # grants: the commit diff splits dirty ranges per entry RUN, so without
+    # it the revoke's two ranges would merge into one event
+    start_b = 4096
+    label_b = fab.fm.propose(Proposal(0, pid, 0x1000 + pid, start_b, 8,
+                                      PERM_RW))
+    assert label_b is not None
+    fab.quiesce()
+
+    def _chk(start, who=None):
+        who = pid if who is None else who
+        ext = pack_ext_addr(np.full(8, who, np.int32),
+                            (start + np.arange(8)).astype(np.int32))
+        return rt.check(ext, jnp.zeros(8, bool))
+
+    # warm both ranges into the PermCache (fenced, all-hit on repeat)
+    for start in (start_a, start_b):
+        assert bool(np.asarray(_chk(start).allowed).all())
+        assert int(np.asarray(_chk(start).probes).sum()) == 0
+
+    # revoke: ONE commit, TWO events at the same epoch; suppress range A's
+    # copy (the FIRST one — so range B's delivered copy both closes the
+    # fence AND reveals the sequence hole; a suppressed TRAILING event is
+    # only detectable at the next publish)
+    fab.inject_faults(_TargetedDrop(0, start_a))
+    fab.fm.revoke_hwpid(pid)
+    fab.fm.bus.faults = None
+    fab.fm.faults = None
+    fab.fm.bus.drain()
+
+    # the trap is armed: fence closed AND range A's grant still cached
+    assert int(rt.permcache.epoch) == fab.fm.epoch
+    cached_pages = set(np.asarray(rt.permcache.tag).ravel().tolist())
+    assert any(start_a + i in cached_pages for i in range(8)), \
+        "precondition: stale grant still cached"
+    assert rt.desynced and rt.desync_events == 1
+    # ...but the desynced host denies, resyncs against the live FM, and
+    # the post-resync verdicts are live-table truth: revoked pid dead on
+    # BOTH ranges, including the one whose invalidation never arrived
+    assert not bool(np.asarray(_chk(start_a).allowed).any())
+    assert rt.resyncs == 1 and not rt.desynced
+    assert not bool(np.asarray(_chk(start_a).allowed).any())
+    assert not bool(np.asarray(_chk(start_b).allowed).any())
+    assert bool(np.asarray(_chk(start_o, other).allowed).all()), \
+        "innocent tenant must survive the victim's revoke + resync"
+
+
+@pytest.mark.parametrize("seed", [11, 12, 13, 14, 15])
+def test_faulted_stream_sweep_never_grants_revoked_or_regranted(seed):
+    """Seeded sweep over suppressed/duplicated/replayed(delayed) BISnp
+    streams: a revoked tenant is NEVER readable again on any host — not
+    during the storm, not after its pages are vacuumed and re-granted to a
+    new tenant over the same span, not after recovery."""
+    rng = np.random.default_rng(seed)
+    fab = ShardedFabric(sdm_pages=1 << 14, table_capacity=2048, n_shards=2)
+    rts = [fab.enroll(h) for h in range(2)]
+    victim = {h: fab.admit(h, 16) for h in range(2)}
+    fab.quiesce()
+    plan = fab.inject_faults(FaultPlan(
+        FaultSpec(drop_p=0.30, dup_p=0.30, delay_p=0.25, max_delay=2),
+        seed=seed))
+
+    def _denied(h, pid, start):
+        ext = pack_ext_addr(np.full(4, pid, np.int32),
+                            (start + np.arange(4)).astype(np.int32))
+        return not bool(np.asarray(
+            rts[h].check(ext, jnp.zeros(4, bool)).allowed).any())
+
+    for h in range(2):
+        fab.evict(h, victim[h][0])        # span back on the free list...
+    fab.fm.vacuum()                       # ...tombstones reclaimed...
+    regrant = {h: fab.admit(h, 16) for h in range(2)}  # ...span reused
+    for h in range(2):
+        assert regrant[h][1] == victim[h][1], "span not reused; test inert"
+        assert regrant[h][0] != victim[h][0]
+    for rnd in range(8):                  # storm: partial, faulted delivery
+        for h in range(2):
+            if rng.random() < 0.7:
+                fab.deliver(h, int(rng.integers(1, 3)))
+            # THE invariant, checked mid-storm every round
+            assert _denied(h, victim[h][0], victim[h][1]), (seed, rnd, h)
+    # recovery: flush delayed copies, then snapshot-resync the fabric
+    fab.quiesce()
+    fab.fm.bus.faults = None
+    fab.fm.faults = None
+    fab.fm.restart()
+    fab.quiesce()
+    assert plan.dropped + plan.duplicated + plan.delayed > 0
+    for h in range(2):
+        assert _denied(h, victim[h][0], victim[h][1])
+        ext = pack_ext_addr(np.full(4, regrant[h][0], np.int32),
+                            (regrant[h][1] + np.arange(4)).astype(np.int32))
+        assert bool(np.asarray(
+            rts[h].check(ext, jnp.zeros(4, bool)).allowed).all()), \
+            "re-granted tenant must be live after recovery"

@@ -1,0 +1,414 @@
+"""Chaos harness for the fail-closed fabric control plane (docs/faults.md):
+seeded drop/dup/reorder/delay on BISnp delivery, sequence-gap detection and
+fail-closed denial, FM crash in the journal/broadcast window + restart
+recovery, host crash/rejoin, link outages in clocked mode, and the seeded
+chaos matrix whose invariant is ZERO stale-grant reads, ever."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    FAULT_DESYNC,
+    FaultPlan,
+    FaultSpec,
+    FMUnavailable,
+    LinkFault,
+    PERM_RW,
+    Proposal,
+    ShardedFabric,
+    pack_ext_addr,
+)
+
+
+def _mk_fabric(n_hosts=4, span=32):
+    fab = ShardedFabric(sdm_pages=1 << 14, table_capacity=2048,
+                        n_shards=n_hosts)
+    rts = [fab.enroll(h) for h in range(n_hosts)]
+    tenants = {h: fab.admit(h, span) for h in range(n_hosts)}
+    fab.quiesce()
+    return fab, rts, tenants
+
+
+def _ext(pid, start, n=8):
+    return pack_ext_addr(np.full(n, pid, np.int32),
+                         (start + np.arange(n)).astype(np.int32))
+
+
+def _allowed(rt, pid, start, n=8):
+    return bool(rt.check(_ext(pid, start, n), jnp.zeros(n, bool))
+                .allowed.all())
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan primitives
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_is_seed_deterministic():
+    spec = FaultSpec(drop_p=0.2, dup_p=0.2, reorder_p=0.2, delay_p=0.2)
+
+    def run(seed):
+        plan = FaultPlan(spec, seed=seed)
+        out = []
+        for i in range(50):
+            out.append(tuple(id(e) for e in plan.copies(0, object())))
+        return plan.dropped, plan.duplicated, plan.delayed, len(out)
+
+    assert run(7) == run(7)
+    assert run(7) != run(8)   # different schedule, same shape of counters
+
+
+def test_fault_plan_reorder_swaps_with_next_publish():
+    plan = FaultPlan(FaultSpec(reorder_p=1.0), seed=0)
+    e1, e2 = object(), object()
+    assert plan.copies(0, e1) == []          # held back
+    out = plan.copies(0, e2)                 # e2 also held; e1 released
+    assert out == [e1]
+    assert plan.stashed(0) == 1              # e2 still in the stash
+    assert plan.flush(0) == [e2]
+    assert plan.stashed() == 0
+
+
+def test_fault_plan_probabilities_validated():
+    with pytest.raises(ValueError):
+        FaultSpec(drop_p=0.6, dup_p=0.6)
+    with pytest.raises(ValueError):
+        FaultSpec(max_delay=0)
+
+
+# ---------------------------------------------------------------------------
+# Sequence-gap detection + resync
+# ---------------------------------------------------------------------------
+
+def test_no_fault_path_never_desyncs():
+    fab, rts, tenants = _mk_fabric()
+    for h in range(4):
+        fab.fm.revoke_hwpid(tenants[h][0])
+    fab.quiesce()
+    st = fab.stats()["faults"]
+    assert st["desync_events"] == st["desynced"] == st["denied_desync"] == 0
+    assert all(not rt.desynced for rt in rts)
+
+
+def test_dropped_event_triggers_gap_and_instant_resync():
+    """A lost BISnp is detected by the next delivered sequence number; with
+    the FM up, the first check() resyncs on the spot and serves LIVE-table
+    verdicts — the revoked tenant is denied, the survivor still allowed."""
+    fab, rts, tenants = _mk_fabric()
+    pid1, start1 = tenants[1]
+    assert _allowed(rts[1], pid1, start1)
+    fab.inject_faults(FaultPlan(FaultSpec(drop_p=1.0), seed=0))
+    fab.fm.revoke_hwpid(pid1)              # every copy dropped
+    fab.fm.bus.faults = None               # storm passes
+    fab.fm.faults = None
+    fab.fm.vacuum()                        # next commit reveals the hole
+    fab.fm.bus.drain()
+    assert rts[1].desynced and rts[1].desync_events == 1
+    assert not _allowed(rts[1], pid1, start1)
+    assert rts[1].resyncs == 1 and not rts[1].desynced
+    pid0, start0 = tenants[0]
+    rts[0].check(_ext(pid0, start0), jnp.zeros(8, bool))  # tick resync
+    assert _allowed(rts[0], pid0, start0)
+
+
+def test_desync_fails_closed_while_fm_down_then_snapshot_recovers():
+    fab, rts, tenants = _mk_fabric()
+    pid1, start1 = tenants[1]
+    pid0, start0 = tenants[0]
+    fab.inject_faults(FaultPlan(FaultSpec(drop_p=1.0), seed=0))
+    fab.fm.revoke_hwpid(pid1)
+    fab.fm.bus.faults = None
+    fab.fm.faults = None
+    fab.fm.vacuum()
+    fab.fm.bus.drain()
+    assert rts[1].desynced
+    fab.fm.crash()
+    # fail closed: every check denies with FAULT_DESYNC, backoff grows
+    for _ in range(70):
+        res = rts[1].check(_ext(pid0, start0), jnp.zeros(8, bool))
+        assert not bool(res.allowed.any())
+        assert int(np.asarray(res.fault).max()) == FAULT_DESYNC
+    assert rts[1].quarantined           # capped attempts exhausted
+    assert rts[1].denied_desync == 70
+    with pytest.raises(FMUnavailable):
+        fab.fm.vacuum()
+    # restart: journal replay + snapshot broadcast clears the quarantine
+    fab.fm.restart()
+    fab.fm.bus.drain()
+    assert rts[1].snapshot_resyncs == 1
+    assert not rts[1].desynced and not rts[1].quarantined
+    assert not _allowed(rts[1], pid1, start1)
+    rts[0].check(_ext(pid0, start0), jnp.zeros(8, bool))
+    assert _allowed(rts[0], pid0, start0)
+
+
+def test_reordered_copy_self_heals_without_fm_round():
+    """A swapped pair loses nothing: the late copy fills the recorded
+    sequence hole and the fail-closed window ends with zero FM calls.
+    (A uniform reorder_p=1.0 plan shifts EVERY copy by one publish, which
+    preserves relative order — to get a genuine swap, hold back only the
+    first event and deliver the second in the clear.)"""
+    fab, rts, tenants = _mk_fabric(n_hosts=2)
+    pid0, start0 = tenants[0]
+    plan = fab.inject_faults(FaultPlan(FaultSpec(reorder_p=1.0), seed=0))
+    fab.fm.revoke_hwpid(tenants[1][0])     # every copy held back one publish
+    fab.fm.bus.faults = None               # storm passes for the next publish
+    fab.fm.faults = None
+    fab.fm.vacuum()                        # delivered first: seq hole recorded
+    fab.fm.bus.faults = plan               # re-wire so drain flushes the stash
+    fab.fm.bus.drain()                     # late revoke copy fills the hole
+    fab.fm.bus.faults = None
+    assert all(rt.desync_events == 1 for rt in rts)
+    assert all(rt.self_heals == 1 for rt in rts)
+    assert all(not rt.desynced for rt in rts)
+    assert all(rt.resyncs == 0 for rt in rts)   # no FM round needed
+    assert _allowed(rts[0], pid0, start0)
+    assert not _allowed(rts[1], *tenants[1])
+
+
+def test_duplicated_events_are_harmless():
+    fab, rts, tenants = _mk_fabric(n_hosts=2)
+    fab.inject_faults(FaultPlan(FaultSpec(dup_p=1.0), seed=0))
+    fab.fm.revoke_hwpid(tenants[1][0])
+    fab.quiesce()
+    assert all(not rt.desynced for rt in rts)
+    assert not _allowed(rts[1], *tenants[1])
+    assert _allowed(rts[0], *tenants[0])
+
+
+# ---------------------------------------------------------------------------
+# FM write-ahead journal: crash in the lost-broadcast window
+# ---------------------------------------------------------------------------
+
+def test_fm_crash_between_journal_and_broadcast_recovers():
+    fab, rts, tenants = _mk_fabric()
+    pid1, start1 = tenants[1]
+    crash_epoch = fab.fm.epoch + 1
+    fab.inject_faults(FaultPlan(fm_crash_epochs=(crash_epoch,)))
+    published0 = fab.fm.bus.published
+    fab.fm.revoke_hwpid(pid1)              # journaled, then FM dies
+    assert fab.fm.crashed
+    assert fab.fm.bus.published == published0   # broadcast never happened
+    rec = fab.fm.journal[-1]
+    assert rec.epoch == crash_epoch and not rec.broadcast
+    assert ("discard", pid1) in rec.hwpid_ops
+    # the table commit is durable: open fences revalidate, no stale grant
+    assert not _allowed(rts[1], pid1, start1)
+    with pytest.raises(FMUnavailable):
+        fab.fm.revoke_hwpid(tenants[0][0])
+    # restart replays the journal: owed broadcast + snapshot resync
+    fab.fm.restart()
+    assert fab.fm.journal[-1].broadcast
+    assert pid1 not in fab.fm.hwpid_global()
+    assert tenants[0][0] in fab.fm.hwpid_global()
+    fab.quiesce()
+    assert not _allowed(rts[1], pid1, start1)
+    assert _allowed(rts[0], *tenants[0])
+    assert all(rt.snapshot_resyncs == 1 for rt in rts)
+
+
+def test_fm_restart_rederives_hwpid_global_from_journal():
+    fab, rts, tenants = _mk_fabric()
+    live_before = fab.fm.hwpid_global()
+    fab.fm.revoke_hwpid(tenants[2][0])
+    expect = fab.fm.hwpid_global()
+    assert expect == live_before - {tenants[2][0]}
+    fab.fm.crash()
+    assert fab.fm.hwpid_global() == set()   # volatile state died
+    fab.fm.restart()
+    assert fab.fm.hwpid_global() == expect
+    fab.quiesce()
+
+
+# ---------------------------------------------------------------------------
+# Host crash / rejoin
+# ---------------------------------------------------------------------------
+
+def test_host_crash_and_cold_rejoin():
+    fab, rts, tenants = _mk_fabric()
+    pid2, start2 = tenants[2]
+    assert _allowed(rts[2], pid2, start2)
+    fab.crash_host(2)
+    with pytest.raises(RuntimeError):
+        rts[2].check(_ext(pid2, start2), jnp.zeros(8, bool))
+    # fabric keeps moving while the host is dark
+    fab.fm.revoke_hwpid(tenants[3][0])
+    fab.quiesce()                           # barrier over surviving hosts
+    fab.rejoin_host(2)
+    assert not rts[2].desynced
+    assert _allowed(rts[2], pid2, start2)   # cold cache, live verdicts
+    assert not _allowed(rts[3], *tenants[3])
+    assert int(rts[2].permcache.misses) > 0  # genuinely cold on re-entry
+
+
+def test_heartbeat_monitor_flags_silent_hosts():
+    fab, rts, tenants = _mk_fabric(n_hosts=2)
+    t = {"now": 0.0}
+    mon = fab.enable_host_monitor(timeout=10.0, clock=lambda: t["now"])
+    assert fab.dead_hosts() == []
+    t["now"] = 5.0
+    rts[0].check(_ext(tenants[0][0], tenants[0][1]), jnp.zeros(8, bool))
+    t["now"] = 12.0
+    assert fab.dead_hosts() == [1]          # host 1 never beat past t=0
+    fab.crash_host(1)                       # detector forgets crashed hosts
+    assert fab.dead_hosts() == []
+    fab.rejoin_host(1)
+    assert fab.dead_hosts() == []           # rejoin beats on entry
+
+
+# ---------------------------------------------------------------------------
+# Bus error-ledger satellites
+# ---------------------------------------------------------------------------
+
+def test_error_ledger_capped_but_count_exact():
+    from repro.core import BISnpBus
+    from repro.core.bus import ERROR_LEDGER_CAP
+    from repro.core.fm import BISnpEvent
+    bus = BISnpBus(max_lag=None, max_handler_failures=10 ** 9)
+    bus.attach(0, lambda ev: (_ for _ in ()).throw(RuntimeError("boom")))
+    n = ERROR_LEDGER_CAP + 40
+    for e in range(n):
+        bus.publish(BISnpEvent(0, 4, epoch=e + 1))
+        bus.deliver(0)
+    assert bus.error_count == n                      # exact total
+    assert len(bus.errors) == ERROR_LEDGER_CAP       # bounded ledger
+    # and the count surfaces through fabric stats (was silently buried)
+    fab, rts, tenants = _mk_fabric(n_hosts=1)
+    fab.fm.bus.attach(99, lambda ev: (_ for _ in ()).throw(
+        RuntimeError("boom")))
+    fab.fm.revoke_hwpid(tenants[0][0])
+    fab.fm.bus.deliver(99)
+    assert fab.stats()["bus"]["error_count"] == 1
+
+
+def test_quiesce_raises_on_wedged_consumer():
+    from repro.core import BISnpBus
+    from repro.core.fm import BISnpEvent
+    bus = BISnpBus(max_lag=None, max_handler_failures=3)
+    bus.attach(0, lambda ev: (_ for _ in ()).throw(RuntimeError("boom")))
+    for e in range(1, 4):
+        bus.publish(BISnpEvent(0, 4, epoch=e))
+    with pytest.raises(RuntimeError, match="wedged"):
+        bus.quiesce()
+    # one failure below the bound stays isolated (the original contract)
+    bus2 = BISnpBus(max_lag=None, max_handler_failures=3)
+    bus2.attach(0, lambda ev: (_ for _ in ()).throw(RuntimeError("boom")))
+    bus2.publish(BISnpEvent(0, 4, epoch=1))
+    bus2.quiesce()                          # must not raise
+    assert bus2.error_count == 1
+
+
+# ---------------------------------------------------------------------------
+# Clocked mode: link degradation + outages
+# ---------------------------------------------------------------------------
+
+def test_link_outage_defers_delivery_and_degrade_slows_it():
+    from repro.memsim.clock import ClockedFabric, TimingConfig
+    cf = ClockedFabric(TimingConfig(jitter=0))
+    fab_plain = cf.topo.downlink(0)
+    base = fab_plain.send(0, 64)
+    # outage window: a message entering mid-outage waits for it to close
+    lk = cf.topo.downlink(1)
+    lk.outages = [(0, 500)]
+    out = lk.send(0, 64)
+    assert out >= 500 + lk.occupancy(64)
+    assert lk.outage_waits == 1
+    # degradation: double the serialization time
+    occ0 = lk.occupancy(64)
+    lk.degrade_factor = 2.0
+    assert lk.occupancy(64) == max(1, int(round(occ0 * 2.0))) or \
+        lk.occupancy(64) >= occ0
+    assert base > 0
+
+
+def test_clocked_fabric_with_link_faults_still_converges():
+    from repro.memsim.clock import ClockedFabric, TimingConfig
+    cf = ClockedFabric(TimingConfig(jitter=0))
+    fab = ShardedFabric(sdm_pages=1 << 14, table_capacity=2048, n_shards=2,
+                        clock=cf)
+    rts = [fab.enroll(h) for h in range(2)]
+    tenants = {h: fab.admit(h, 16) for h in range(2)}
+    fab.inject_faults(FaultPlan(
+        link_faults={1: LinkFault(degrade=4.0, outages=((0, 2000),))}))
+    fab.fm.revoke_hwpid(tenants[1][0])
+    fab.quiesce()                          # runs the clock to idle
+    assert all(not rt.desynced for rt in rts)
+    assert not _allowed(rts[1], *tenants[1])
+    assert _allowed(rts[0], *tenants[0])
+    assert cf.topo.downlink(1).outage_waits >= 1
+
+
+# ---------------------------------------------------------------------------
+# The acceptance matrix: >= 5 seeded schedules x all fault classes,
+# ZERO stale-grant reads, bounded reconvergence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [1, 2, 3, 4, 5])
+def test_chaos_matrix_zero_stale_grant_reads(seed):
+    rng = np.random.default_rng(seed)
+    n_hosts = 4
+    fab, rts, tenants = _mk_fabric(n_hosts=n_hosts, span=16)
+    plan = fab.inject_faults(FaultPlan(
+        FaultSpec(drop_p=0.15, dup_p=0.10, reorder_p=0.10, delay_p=0.10,
+                  max_delay=3),
+        seed=seed,
+        fm_crash_epochs=(fab.fm.epoch + 2 + int(rng.integers(0, 3)),)))
+    live = {h: [tenants[h]] for h in range(n_hosts)}
+    revoked: list[tuple[int, int, int]] = []   # (host, pid, start)
+    crashed_host: int | None = None
+    stale_reads = 0
+
+    for rnd in range(14):
+        op = int(rng.integers(0, 3))
+        if not fab.fm.crashed:
+            try:
+                if op == 0:
+                    hs = [h for h in live if live[h] and h != crashed_host]
+                    if hs:
+                        h = hs[int(rng.integers(0, len(hs)))]
+                        pid, start = live[h].pop()
+                        fab.fm.revoke_hwpid(pid)
+                        revoked.append((h, pid, start))
+                elif op == 1:
+                    h = int(rng.integers(0, n_hosts))
+                    if h != crashed_host and fab.free_pages(h) >= 16:
+                        live[h].append(fab.admit(h, 16))
+            except FMUnavailable:
+                pass                         # crash point fired mid-op
+        elif rng.random() < 0.5:
+            fab.fm.restart()
+        if rnd == 5 and crashed_host is None:
+            crashed_host = int(rng.integers(0, n_hosts))
+            fab.crash_host(crashed_host)
+        if rnd == 10 and crashed_host is not None:
+            fab.rejoin_host(crashed_host)
+            crashed_host = None
+        for h in range(n_hosts):
+            if h != crashed_host and rng.random() < 0.7:
+                fab.deliver(h, int(rng.integers(1, 4)))
+        # THE invariant: no revoked grant is EVER readable on a live host
+        for (h, pid, start) in revoked:
+            if h == crashed_host:
+                continue
+            res = rts[h].check(_ext(pid, start, 4), jnp.zeros(4, bool))
+            stale_reads += int(np.asarray(res.allowed).sum())
+    assert stale_reads == 0
+
+    # recovery: storm passes, FM (re)publishes a snapshot, fabric drains
+    if crashed_host is not None:
+        fab.rejoin_host(crashed_host)
+    fab.quiesce()                            # flushes delayed copies too
+    fab.fm.bus.faults = None
+    fab.fm.faults = None
+    fab.fm.restart()                         # idempotent snapshot resync
+    fab.quiesce()
+    assert all(not rt.desynced for rt in rts)
+    st = fab.stats()["faults"]
+    assert st["desynced"] == st["quarantined"] == 0
+    # schedule actually exercised the fault classes
+    assert plan.dropped + plan.duplicated + plan.delayed > 0
+    # converged verdicts everywhere: revoked denied, live allowed
+    for (h, pid, start) in revoked:
+        assert not _allowed(rts[h], pid, start, 4)
+    for h, grants in live.items():
+        for pid, start in grants:
+            assert _allowed(rts[h], pid, start, 4), (seed, h, pid)
