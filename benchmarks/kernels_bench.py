@@ -371,11 +371,14 @@ def bench_checked_gather() -> dict:
     local = make_hwpid_local([hwpid])
     rows = jnp.asarray(rng.integers(0, 4096, 8192), jnp.int32)
 
-    plain = jax.jit(lambda r: jnp.take(w, r, axis=0))
-    checked = jax.jit(lambda r: checked_gather(
-        pool, "w", r, hwpid=hwpid, table=table, hwpid_local=local).data)
-    us_plain = _time(plain, rows)
-    us_checked = _time(checked, rows)
+    # weights/table/hwpid-local enter as runtime operands — closure-captured
+    # arrays get constant-folded by XLA and the timing stops being the
+    # shipped dispatch path
+    plain = jax.jit(lambda r, w_: jnp.take(w_, r, axis=0))
+    checked = jax.jit(lambda r, t, lo: checked_gather(
+        pool, "w", r, hwpid=hwpid, table=t, hwpid_local=lo).data)
+    us_plain = _time(plain, rows, w)
+    us_checked = _time(checked, rows, table, local)
     # fragmented table: one entry per page
     fm2 = FabricManager(sdm_pages=pool.total_pages + 4, table_capacity=8192)
     h2 = fm2.enroll_host(0)
@@ -383,9 +386,9 @@ def bench_checked_gather() -> dict:
     for p in range(region.start_page, region.start_page + region.n_pages):
         fm2.propose(Proposal(0, pid2, 1, p, 1, PERM_RW))
     table2 = fm2.table.to_device()
-    checked_wc = jax.jit(lambda r: checked_gather(
-        pool, "w", r, hwpid=pid2, table=table2, hwpid_local=local).data)
-    us_wc = _time(checked_wc, rows)
+    checked_wc = jax.jit(lambda r, t, lo: checked_gather(
+        pool, "w", r, hwpid=pid2, table=t, hwpid_local=lo).data)
+    us_wc = _time(checked_wc, rows, table2, local)
     return {
         "bench": "checked_gather",
         "plain_us": round(us_plain, 1),
@@ -468,6 +471,7 @@ def bench_churn() -> dict:
                 table = fm.table.to_device()
             t0 = time.perf_counter()
             for t in tenants:
+                # isolint: allow(fence-discipline) — standalone FM with no bus; the churn-step epoch mismatch IS the measured variable (cached_check_access self-invalidates on it)
                 res, holder["cache"] = cached_check_access_jit(
                     table, t["local"], t["ext"], wr, holder["cache"])
             jax.block_until_ready(res.allowed)

@@ -47,7 +47,7 @@ def _headline(name: str, rec: dict) -> str:
                     f"{rec['worst_case_storage_pct']}% cache "
                     f"{rec['cache_penalty_pct']}% fanout "
                     f"{rec['bisnp_us_per_host']}us/host")
-    except Exception:  # noqa: BLE001
+    except Exception:  # noqa: BLE001  # isolint: allow(silent-except) — cosmetic headline formatting; a missing key falls through to the description below
         pass
     return rec.get("description", "")[:60]
 

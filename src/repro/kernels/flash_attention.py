@@ -32,6 +32,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 NEG_INF = -0.7 * float(np.finfo(np.float32).max)
 
 BLOCK_Q = 128
@@ -93,9 +95,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
 def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = -1,
                            block_q: int = BLOCK_Q, block_k: int = BLOCK_K,
-                           interpret: bool = True):
+                           interpret: bool | None = None):
     """q: [B, H, Sq, dh]; k/v: [B, Hkv, Sk, dh] (GQA folded via index_map).
     Returns [B, H, Sq, dh] in q.dtype."""
+    interpret = resolve_interpret(interpret)
     b, h, sq, dh = q.shape
     hkv, sk = k.shape[1], k.shape[2]
     g = h // hkv
@@ -133,5 +136,11 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = -1,
             pltpu.VMEM((block_q,), jnp.float32),      # l (running sum)
         ],
         interpret=interpret,
+        # K is innermost and sequential (scratch accumulates across it);
+        # batch/head/Q-block steps are independent, so Mosaic may double-
+        # buffer and reorder them.
+        **({} if interpret else {"compiler_params": pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))}),
     )(q, k, v)
     return out[:, :, :sq]

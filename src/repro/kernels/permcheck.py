@@ -56,6 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.table import (HWPID_SHIFT, PAGE_MASK, SUMMARY_TILE,
                               summary_candidate_tiles, tenant_permbits,
@@ -468,6 +469,10 @@ def permcheck_view_pallas(ext_addrs, view: ShardView, *, hwpid: int,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
+        # each ADDR_BLOCK of addresses is checked independently against the
+        # (replicated) entry arrays — the grid is embarrassingly parallel
+        **({} if interpret else {"compiler_params": pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",))}),
     )(*operands)
     return allowed[:b].astype(bool), idx[:b]
 

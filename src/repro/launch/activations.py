@@ -32,7 +32,7 @@ def current_mesh():
         try:
             from jax.interpreters import pxla
             m = pxla.thread_resources.env.physical_mesh
-        except Exception:  # noqa: BLE001 - jax internals moved
+        except Exception:  # noqa: BLE001  # isolint: allow(silent-except) — probing a private jax API; any failure means "no ambient mesh", which is a supported answer
             return None
     return None if m is None or m.empty else m
 

@@ -99,6 +99,9 @@ class LoopReport:
     restarts: list[int] = field(default_factory=list)
     losses: list[float] = field(default_factory=list)
     slow_steps: list[int] = field(default_factory=list)
+    # (step, repr(exception)) for every recovered failure — the recovery
+    # path must stay auditable, not just counted
+    failures: list[tuple[int, str]] = field(default_factory=list)
 
 
 class ResilientLoop:
@@ -150,8 +153,9 @@ class ResilientLoop:
                         self.ckpt_dir, step, state,
                         blocking=not self.async_ckpt)
                     report.checkpoints_written += 1
-            except Exception:
+            except Exception as exc:
                 restarts += 1
+                report.failures.append((step, repr(exc)))
                 if restarts > self.max_restarts:
                     raise
                 self._join()

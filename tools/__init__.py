@@ -1,0 +1,7 @@
+"""Repo-local developer tooling (stdlib-only linters run in CI).
+
+``lintlib`` is the shared chassis (file walking, findings, pragmas,
+baselines, reports); ``docs_lint`` and ``isolint`` are the two linters
+built on it.  Everything here must stay importable with no third-party
+dependencies — the CI analysis job runs before any ``pip install``.
+"""

@@ -13,9 +13,14 @@ Stdlib-only (CI must not depend on extra packages), two passes:
     CI must stay hermetic), and every doc under ``docs/`` must be
     reachable from ``docs/README.md`` (no orphan pages).
 
+Built on the shared :mod:`tools.lintlib` chassis (same ``Finding`` shape,
+walker, and CLI convention as isolint).  A ``# docs_lint: allow(<rule>) —
+reason`` pragma on the flagged line (or the line above) suppresses a
+docstring finding.
+
 Exit status: 0 clean, 1 with findings (one line each).
 
-    python tools/docs_lint.py [--root .]
+    python tools/docs_lint.py [--root .] [--report out.json]
 """
 from __future__ import annotations
 
@@ -25,76 +30,113 @@ import pathlib
 import re
 import sys
 
+try:
+    from tools import lintlib
+except ImportError:         # `python tools/docs_lint.py`: tools/ on sys.path
+    import lintlib          # type: ignore[no-redef]
+
+TOOL = "docs_lint"
 DOC_SCOPES = ["src/repro/core", "src/repro/memsim"]
 MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)]*)?\)")
 
 
-def docstring_gaps(path: pathlib.Path) -> list[str]:
-    """D1-family findings for one file: ``code name:line`` strings."""
-    tree = ast.parse(path.read_text())
-    out = []
+def docstring_gaps(path: pathlib.Path,
+                   root: pathlib.Path) -> list[lintlib.Finding]:
+    """D1-family findings for one file (pragma suppression applied)."""
+    text = path.read_text()
+    tree = ast.parse(text)
+    rel = lintlib.rel_path(path, root)
+    pragmas = lintlib.parse_pragmas(text, tool=TOOL)
+    out: list[lintlib.Finding] = []
+
+    def add(rule: str, line: int, what: str, name: str) -> None:
+        if lintlib.pragma_allows(pragmas, line, rule):
+            return
+        out.append(lintlib.Finding(
+            rule, rel, line, f"missing docstring in {what} {name}".strip(),
+            key=f"{rule}:{name or '<module>'}"))
+
     if not ast.get_docstring(tree):
-        out.append(f"{path}:1 D100 missing module docstring")
+        add("D100", 1, "module", "")
     for node in tree.body:
         if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
             if not node.name.startswith("_") and not ast.get_docstring(node):
-                out.append(f"{path}:{node.lineno} D103 missing docstring "
-                           f"in function {node.name}")
+                add("D103", node.lineno, "function", node.name)
         elif isinstance(node, ast.ClassDef):
             if not node.name.startswith("_") and not ast.get_docstring(node):
-                out.append(f"{path}:{node.lineno} D101 missing docstring "
-                           f"in class {node.name}")
+                add("D101", node.lineno, "class", node.name)
             for m in node.body:
                 if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef)) \
                         and not m.name.startswith("_") \
                         and not ast.get_docstring(m):
-                    out.append(f"{path}:{m.lineno} D102 missing docstring "
-                               f"in method {node.name}.{m.name}")
+                    add("D102", m.lineno, "method",
+                        f"{node.name}.{m.name}")
     return out
 
 
-def link_gaps(root: pathlib.Path) -> list[str]:
+def link_gaps(root: pathlib.Path) -> list[lintlib.Finding]:
     """Broken relative links + docs/ pages unreachable from the index."""
-    out = []
+    out: list[lintlib.Finding] = []
     pages = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
     linked_docs: set[pathlib.Path] = set()
     for page in pages:
+        rel = lintlib.rel_path(page, root)
         if not page.exists():
-            out.append(f"{page}: required page is missing")
+            out.append(lintlib.Finding(
+                "missing-page", rel, 1, "required page is missing",
+                key=rel))
             continue
-        for m in MD_LINK.finditer(page.read_text()):
-            target = m.group(1)
-            if "://" in target or target.startswith("mailto:"):
-                continue
-            resolved = (page.parent / target).resolve()
-            if not resolved.exists():
-                out.append(f"{page}: broken link -> {target}")
-            elif resolved.suffix == ".md" and \
-                    resolved.is_relative_to((root / "docs").resolve()):
-                linked_docs.add(resolved)
+        for i, line in enumerate(page.read_text().splitlines(), start=1):
+            for m in MD_LINK.finditer(line):
+                target = m.group(1)
+                if "://" in target or target.startswith("mailto:"):
+                    continue
+                resolved = (page.parent / target).resolve()
+                if not resolved.exists():
+                    out.append(lintlib.Finding(
+                        "broken-link", rel, i,
+                        f"broken link -> {target}", key=target))
+                elif resolved.suffix == ".md" and \
+                        resolved.is_relative_to((root / "docs").resolve()):
+                    linked_docs.add(resolved)
     index = root / "docs" / "README.md"
     for doc in sorted((root / "docs").glob("*.md")):
         if doc == index:
             continue
         if doc.resolve() not in linked_docs:
-            out.append(f"{doc}: orphan — not linked from docs/README.md "
-                       f"or README.md")
+            rel = lintlib.rel_path(doc, root)
+            out.append(lintlib.Finding(
+                "orphan-doc", rel, 1,
+                "orphan — not linked from docs/README.md or README.md",
+                key=rel))
     return out
 
 
-def main() -> int:
-    """Run both passes; print findings; return the exit status."""
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--root", default=".", help="repository root")
-    args = ap.parse_args()
-    root = pathlib.Path(args.root)
-    findings: list[str] = []
-    for scope in DOC_SCOPES:
-        for path in sorted((root / scope).glob("*.py")):
-            findings += docstring_gaps(path)
+def run(root: pathlib.Path) -> list[lintlib.Finding]:
+    """Both passes over the configured scopes, sorted."""
+    findings: list[lintlib.Finding] = []
+    for path in lintlib.iter_py_files(root, DOC_SCOPES):
+        findings += docstring_gaps(path, root)
     findings += link_gaps(root)
+    return lintlib.sort_findings(findings)
+
+
+def main(argv=None) -> int:
+    """Run both passes; print findings; return the exit status."""
+    ap = argparse.ArgumentParser(description="documentation lint")
+    ap.add_argument("--root", default=".", help="repository root")
+    ap.add_argument("--report", default=None,
+                    help="write the JSON run artifact here")
+    args = ap.parse_args(argv)
+    root = pathlib.Path(args.root)
+    findings = run(root)
     for f in findings:
-        print(f)
+        print(f.format())
+    if args.report:
+        lintlib.write_report(root / args.report, {
+            "tool": TOOL,
+            "findings": [f.to_json() for f in findings],
+        })
     if findings:
         print(f"\ndocs lint: {len(findings)} finding(s)")
         return 1

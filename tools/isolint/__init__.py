@@ -1,0 +1,58 @@
+"""isolint — static isolation-flow and kernel-budget analyzer.
+
+Space-Control's security argument is that EVERY memory egress is validated
+by the Permission Checker; this package makes that a machine-checked
+property of the code instead of reviewer folklore.  Four stdlib-only
+AST/dataflow passes over ``src/``, ``examples/``, and ``benchmarks/``:
+
+  1. **egress-bypass taint** (`passes_taint`) — values originating from
+     ``SharedTensorPool.tensor()``/``.region()`` must reach a checked sink
+     (``checked_gather``, ``checked_memcrypt*``, ``HostRuntime.check``,
+     ``ShardedFabric.step_egress``) before being indexed or read;
+  2. **fence discipline** (`passes_fences`) — cache-consuming calls after a
+     ``bus.publish``/FM commit need an interposed ``deliver_until``/
+     ``quiesce``, and check entry points must default-deny (a FAULT_*
+     fallthrough or delegation to one);
+  3. **Pallas kernel budget** (`passes_vmem`) — per-grid-step VMEM
+     footprint derived from BlockSpec shapes x dtypes, gated against a
+     configurable budget, plus lints for hardcoded ``interpret=True``,
+     missing ``dimension_semantics`` on compiled paths, and closure-
+     captured jnp arrays inside ``jax.jit(lambda ...)`` (XLA constant-folds
+     them, corrupting benchmarks — the PR 6 bug class);
+  4. **fail-closed hygiene** (`passes_hygiene`) — broad ``except
+     Exception`` handlers must record the failure (bind and use the
+     exception) or re-raise.
+
+Deliberate exceptions carry ``# isolint: allow(<rule>) — <reason>``
+pragmas; everything else is gated in CI against a committed baseline
+(``tools/isolint/baseline.json``), so only NEW violations fail a PR.
+
+    python -m tools.isolint src examples benchmarks
+
+See ``docs/static_analysis.md`` for rules, pragma syntax, and the VMEM
+table.
+"""
+from __future__ import annotations
+
+RULES: dict[str, str] = {
+    "egress-bypass":
+        "raw SharedTensorPool read that never reaches a checked sink",
+    "fence-discipline":
+        "cache state consumed after a publish/commit without a fence",
+    "default-deny":
+        "check entry point with no FAULT_* fallthrough or delegation",
+    "vmem-budget":
+        "pallas_call per-grid-step VMEM footprint exceeds the budget",
+    "vmem-unresolved":
+        "pallas_call whose BlockSpec shapes could not be resolved",
+    "interpret-hardcoded":
+        "pallas kernel pinned to interpret=True (never compiles)",
+    "missing-dimension-semantics":
+        "compiled-path pallas_call without dimension_semantics",
+    "closure-captured-operand":
+        "jax.jit(lambda) closure-captures an array (constant-folded)",
+    "silent-except":
+        "broad except handler that swallows the failure unrecorded",
+    "malformed-pragma":
+        "isolint allow pragma without a reason",
+}

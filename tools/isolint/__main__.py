@@ -1,0 +1,172 @@
+"""isolint CLI — run every pass, apply pragmas, gate against the baseline.
+
+Usage (from the repo root):
+
+    python -m tools.isolint src examples benchmarks
+    python -m tools.isolint --report isolint-report.json
+    python -m tools.isolint --write-baseline        # accept current findings
+    python -m tools.isolint --list-rules
+
+Exit status: 0 when every finding is baselined (or none exist); 1 when new
+findings appear; 2 on usage errors (bad scope, unreadable baseline).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import pathlib
+import sys
+
+from tools import lintlib
+from tools.isolint import RULES, config
+from tools.isolint import passes_fences, passes_hygiene, passes_taint, \
+    passes_vmem
+
+TOOL = "isolint"
+
+
+def analyze_tree(root: pathlib.Path, scopes, *, budget: int):
+    """Run all four passes over every .py file in `scopes`.
+
+    Returns ``(findings, vmem_rows, suppressed_count, parse_errors)`` with
+    pragma suppression already applied and malformed pragmas converted to
+    findings."""
+    findings: list[lintlib.Finding] = []
+    vmem_rows: list[dict] = []
+    suppressed = 0
+    parse_errors: list[str] = []
+    for f in lintlib.iter_py_files(root, scopes):
+        path = lintlib.rel_path(f, root)
+        text = f.read_text()
+        try:
+            tree = ast.parse(text)
+        except SyntaxError as e:
+            parse_errors.append(f"{path}:{e.lineno}: {e.msg}")
+            continue
+        pragmas = lintlib.parse_pragmas(text, tool=TOOL)
+        raw = passes_taint.run(tree, path)
+        raw += passes_fences.run(tree, path)
+        vf, rows = passes_vmem.analyze_file(tree, path, root, budget=budget)
+        raw += vf
+        vmem_rows += rows
+        raw += passes_hygiene.run(tree, path)
+        for finding in raw:
+            if lintlib.pragma_allows(pragmas, finding.line, finding.rule):
+                suppressed += 1
+            else:
+                findings.append(finding)
+        findings += lintlib.malformed_pragma_findings(pragmas, path)
+    return lintlib.sort_findings(findings), vmem_rows, suppressed, \
+        parse_errors
+
+
+def _vmem_table(rows: list[dict]) -> str:
+    """Human rendering of the per-kernel VMEM footprint table."""
+    if not rows:
+        return "  (no pallas_call sites in scope)"
+    lines = ["  kernel (variant)                        per-step"
+             "      gated  2x  ok"]
+    for r in sorted(rows, key=lambda r: (r["path"], r["line"],
+                                         r.get("variant", ""))):
+        label = r["kernel"] + (f" ({r['variant']})" if r["variant"] else "")
+        if "unresolved" in r:
+            lines.append(f"  {label:<40}  unresolved: {r['unresolved']}")
+            continue
+        ok = "ok" if r["within_budget"] else "OVER"
+        db = "2x" if r["double_buffered"] else "  "
+        lines.append(f"  {label:<40} {r['per_step_bytes']:>9,}"
+                     f" {r['gated_bytes']:>10,}  {db}  {ok}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="isolint",
+        description="static isolation-flow and kernel-budget analyzer")
+    ap.add_argument("scopes", nargs="*", default=list(config.DEFAULT_SCOPES),
+                    help="files/dirs to analyze (default: %(default)s)")
+    ap.add_argument("--root", default=".",
+                    help="repo root the scopes are relative to")
+    ap.add_argument("--report", default=None,
+                    help="write the JSON run artifact here")
+    ap.add_argument("--baseline", default=config.DEFAULT_BASELINE,
+                    help="baseline file of accepted findings")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline (every finding fails)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept the current findings as the new baseline")
+    ap.add_argument("--vmem-budget", type=int,
+                    default=config.VMEM_BUDGET_BYTES,
+                    help="per-grid-step VMEM budget in bytes "
+                         "(default: %(default)s)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule ids and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in sorted(RULES.items()):
+            print(f"{rule:<28} {desc}")
+        return 0
+
+    root = pathlib.Path(args.root)
+    try:
+        findings, vmem_rows, suppressed, parse_errors = analyze_tree(
+            root, args.scopes, budget=args.vmem_budget)
+    except FileNotFoundError as e:
+        print(f"isolint: {e}", file=sys.stderr)
+        return 2
+
+    for err in parse_errors:
+        print(f"isolint: cannot parse {err}", file=sys.stderr)
+
+    baseline_path = root / args.baseline
+    if args.write_baseline:
+        lintlib.save_baseline(baseline_path, findings, tool=TOOL)
+        print(f"isolint: wrote {len(findings)} entries to "
+              f"{lintlib.rel_path(baseline_path, root)}")
+        return 0
+
+    try:
+        baseline = ([] if args.no_baseline
+                    else lintlib.load_baseline(baseline_path))
+    except (json.JSONDecodeError, KeyError) as e:
+        print(f"isolint: unreadable baseline {baseline_path}: {e}",
+              file=sys.stderr)
+        return 2
+    new, baselined, stale = lintlib.partition_findings(findings, baseline)
+
+    print(f"isolint: {len(findings)} finding(s) "
+          f"({len(new)} new, {len(baselined)} baselined, "
+          f"{suppressed} pragma-suppressed) over "
+          f"{len(vmem_rows)} kernel variant(s)")
+    for f in new:
+        print(f"  NEW {f.format()}")
+    for f in baselined:
+        print(f"  baselined {f.format()}")
+    for ident in stale:
+        print(f"  stale baseline entry (delete it): {ident}")
+    print("VMEM per grid step (budget "
+          f"{args.vmem_budget:,} B):")
+    print(_vmem_table(vmem_rows))
+
+    if args.report:
+        lintlib.write_report(root / args.report, {
+            "tool": TOOL,
+            "scopes": list(args.scopes),
+            "vmem_budget_bytes": args.vmem_budget,
+            "findings": [f.to_json() for f in findings],
+            "new": [f.to_json() for f in new],
+            "stale_baseline": [list(s) for s in stale],
+            "suppressed": suppressed,
+            "parse_errors": parse_errors,
+            "vmem": vmem_rows,
+        })
+
+    if parse_errors:
+        return 2
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,97 @@
+"""Small AST helpers shared by the isolint passes (stdlib ``ast`` only)."""
+from __future__ import annotations
+
+import ast
+
+
+def parent_map(tree: ast.AST) -> dict[ast.AST, ast.AST]:
+    """``{child: parent}`` for every node (the stdlib has no uplinks)."""
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def call_name(call: ast.Call) -> str | None:
+    """Final name segment of a call target: ``a.b.c(...)`` -> ``c``,
+    ``f(...)`` -> ``f``; None for computed targets like ``fns[i](...)``."""
+    fn = call.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return None
+
+
+def name_root(node: ast.AST) -> str | None:
+    """Leftmost name of a dotted/call chain: ``a.b.c`` -> ``a``,
+    ``f(x).g`` -> ``f``; None when the chain starts from a literal."""
+    while True:
+        if isinstance(node, ast.Name):
+            return node.id
+        if isinstance(node, ast.Attribute):
+            node = node.value
+        elif isinstance(node, ast.Call):
+            node = node.func
+        elif isinstance(node, ast.Subscript):
+            node = node.value
+        else:
+            return None
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` for a pure attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def function_scopes(tree: ast.Module):
+    """Yield ``(scope_node, qualname)`` for the module and every (nested)
+    function/method — the units the flow passes analyze one at a time."""
+    yield tree, "<module>"
+
+    def walk(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{child.name}"
+                yield child, qual
+                yield from walk(child, qual + ".")
+            elif isinstance(child, ast.ClassDef):
+                yield from walk(child, f"{prefix}{child.name}.")
+            else:
+                yield from walk(child, prefix)
+
+    yield from walk(tree, "")
+
+
+def scope_nodes(scope: ast.AST) -> list[ast.AST]:
+    """Every node belonging to `scope` itself, in source order, descending
+    into compound statements and expressions but NOT into nested
+    function/class definitions (they are their own scopes)."""
+    out: list[ast.AST] = []
+
+    def visit(node):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                continue
+            out.append(child)
+            visit(child)
+
+    visit(scope)
+    return out
+
+
+def scope_calls(scope: ast.AST) -> list[ast.Call]:
+    """Every Call in `scope`'s own code (nested defs excluded), ordered by
+    source position — the event stream the fence pass scans."""
+    calls = [n for n in scope_nodes(scope) if isinstance(n, ast.Call)]
+    calls.sort(key=lambda c: (c.lineno, c.col_offset))
+    return calls

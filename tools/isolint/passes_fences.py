@@ -1,0 +1,97 @@
+"""Pass 2 — fence discipline and default-deny check entry points.
+
+**fence-discipline**: within one flow (a function body, or a module's
+top-level script), a call that consumes PermCache / fabric-view state
+(``cached_check_access*``, ``HostRuntime.check``, ``step_egress``) after a
+permission-state publish (``bus.publish``, FM ``propose``/``revoke*``/
+``commit``, fabric ``admit``/``evict``/``grant_shared``/``vacuum``) is
+stale unless a BISnp fence (``deliver``/``deliver_until``/``quiesce``/
+``drain``/``sync_host``/``restart``) ran in between.  The scan is linear
+over the flow's calls in source order — an intentionally simple
+abstraction of the program order the bus protocol cares about; branch-
+dependent flows that are actually safe carry a pragma saying why.
+
+**default-deny**: every check entry point (``check_access``,
+``cached_check_access``, ``HostRuntime.check``, ``desync_check_result``)
+must be fail-closed — its body must reference a ``FAULT_*`` constant other
+than ``FAULT_NONE`` or delegate to a verdict assembler that does.  A check
+path with no fault fallthrough would answer "allowed" by omission.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.isolint import config
+from tools.isolint.astutil import call_name, function_scopes, scope_calls, \
+    scope_nodes
+from tools.lintlib import Finding
+
+RULE_FENCE = "fence-discipline"
+RULE_DENY = "default-deny"
+
+
+def _fence_findings(tree: ast.Module, path: str) -> list[Finding]:
+    out: list[Finding] = []
+    for scope, qual in function_scopes(tree):
+        dirty_since: ast.Call | None = None
+        for call in scope_calls(scope):
+            name = call_name(call)
+            if name is None:
+                continue
+            if name in config.FENCE_METHODS:
+                dirty_since = None
+            elif name in config.PUBLISH_METHODS:
+                dirty_since = call
+            elif name in config.CACHE_CONSUMERS and dirty_since is not None:
+                pub = call_name(dirty_since)
+                out.append(Finding(
+                    RULE_FENCE, path, call.lineno,
+                    f"`{name}(...)` consumes cache state after "
+                    f"`{pub}(...)` (line {dirty_since.lineno}) with no "
+                    f"deliver_until/quiesce fence between (in {qual})",
+                    key=f"{qual}:{pub}->{name}"))
+                dirty_since = None      # one finding per unfenced window
+    return out
+
+
+def _deny_findings(tree: ast.Module, path: str) -> list[Finding]:
+    out: list[Finding] = []
+    for scope, qual in function_scopes(tree):
+        if not isinstance(scope, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if scope.name not in config.CHECK_ENTRY_POINTS:
+            continue
+        fails_closed = False
+        for node in scope_nodes(scope):
+            if (isinstance(node, ast.Name)
+                    and node.id.startswith(config.FAULT_PREFIX)
+                    and node.id not in config.FAULT_BENIGN):
+                fails_closed = True
+                break
+            if (isinstance(node, ast.Call)
+                    and call_name(node) in config.FAULT_DELEGATES):
+                fails_closed = True
+                break
+            if isinstance(node, ast.Raise):
+                fails_closed = True     # refusing loudly is fail-closed too
+                break
+        if not fails_closed:
+            out.append(Finding(
+                RULE_DENY, path, scope.lineno,
+                f"check entry point `{qual}` has no FAULT_* fallthrough "
+                f"and no delegation to one — a deny-by-default path is "
+                f"required",
+                key=qual))
+    return out
+
+
+def run(tree: ast.Module, path: str) -> list[Finding]:
+    """Fence-discipline + default-deny findings for one parsed file.
+
+    The default-deny rule targets the enforcement layer itself, so it only
+    runs over ``src/`` — a bench or example defining its own `check(...)`
+    helper is not a Space-Control entry point."""
+    out = _fence_findings(tree, path)
+    if path.startswith("src/"):
+        out += _deny_findings(tree, path)
+    return out

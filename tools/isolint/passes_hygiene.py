@@ -1,0 +1,86 @@
+"""Pass 4 — fail-closed exception hygiene.
+
+A broad handler (``except Exception`` / bare ``except``) that neither
+re-raises nor records what it swallowed turns a fault-tolerance path into
+a fault-*hiding* path: the simulated fabric keeps answering, but nothing
+in any ledger says a failure happened.  The pass accepts a broad handler
+when it
+
+  * binds the exception (``as exc``) AND uses the bound name somewhere in
+    its body (logging it, appending it to a ledger/stats structure,
+    re-raising it), or
+  * re-raises — a bare ``raise`` anywhere in its body (cleanup-then-
+    reraise, e.g. a transaction abort trampoline), or
+  * carries an ``# isolint: allow(silent-except) — reason`` pragma.
+
+Narrow handlers (``except KeyError``, tuples of concrete types) are not
+flagged — catching a specific expected error is a decision, not a hole.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lintlib import Finding
+
+RULE = "silent-except"
+
+_BROAD = {"Exception", "BaseException"}
+
+
+def _is_broad(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if t is None:
+        return True                      # bare `except:`
+    if isinstance(t, ast.Name):
+        return t.id in _BROAD
+    if isinstance(t, ast.Tuple):
+        return any(isinstance(e, ast.Name) and e.id in _BROAD
+                   for e in t.elts)
+    return False
+
+
+def _uses_bound_name(handler: ast.ExceptHandler) -> bool:
+    if not handler.name:
+        return False
+    return any(isinstance(n, ast.Name) and n.id == handler.name
+               and isinstance(n.ctx, ast.Load)
+               for stmt in handler.body for n in ast.walk(stmt))
+
+
+def _reraises(handler: ast.ExceptHandler) -> bool:
+    """A bare ``raise`` anywhere in the handler body (cleanup-then-reraise
+    is fail-closed: the failure still propagates)."""
+    return any(isinstance(n, ast.Raise) and n.exc is None
+               for stmt in handler.body for n in ast.walk(stmt))
+
+
+def run(tree: ast.Module, path: str) -> list[Finding]:
+    """Silent-except findings for one parsed file."""
+    out: list[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler) or not _is_broad(node):
+            continue
+        if _reraises(node):
+            continue
+        if _uses_bound_name(node):
+            continue
+        what = "bare except" if node.type is None else "except Exception"
+        out.append(Finding(
+            RULE, path, node.lineno,
+            f"broad `{what}` swallows the failure without recording it — "
+            f"bind it and write it to a ledger/stats, or pragma with the "
+            f"reason",
+            key=f"except@{_context(tree, node)}"))
+    return out
+
+
+def _context(tree: ast.Module, handler: ast.ExceptHandler) -> str:
+    """Line-free key context: the qualname of the enclosing function (or
+    '<module>'), plus an ordinal among that scope's broad handlers."""
+    from tools.isolint.astutil import function_scopes, scope_nodes
+    for scope, qual in function_scopes(tree):
+        handlers = [n for n in scope_nodes(scope)
+                    if isinstance(n, ast.ExceptHandler)]
+        if handler in handlers:
+            return f"{qual}#{handlers.index(handler)}"
+    return "<module>#?"

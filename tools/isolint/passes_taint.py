@@ -1,0 +1,164 @@
+"""Pass 1 — egress-bypass taint: every raw pool read must reach a checked
+sink before it is indexed or read.
+
+Sources are calls of ``.tensor(...)`` / ``.region(...)`` on a pool-like
+receiver (name matches /pool/i, or assigned from ``SharedTensorPool(...)``
+in the same scope).  The returned value is *tainted*; within the scope it
+
+  * may be passed (positionally or by keyword) into a checked sink
+    (``checked_gather``, ``checked_memcrypt*``, ``HostRuntime.check``,
+    ``ShardedFabric.step_egress``, ...) — the sanctioned egress;
+  * may have metadata attributes read (``.shape``, ``.start_page``, ...);
+  * may be re-bound to another name (taint propagates);
+  * any other use — subscripting, arithmetic, being handed to a non-sink
+    call, being returned or yielded — is a finding: the value left the
+    pool without passing the Permission Checker.
+
+The bodies of ``TRUSTED_EGRESS_IMPLS`` (the enforcement layer itself,
+e.g. ``checked_gather``) are exempt: their raw read is the one the checker
+they implement guards.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.isolint import config
+from tools.isolint.astutil import (call_name, function_scopes, name_root,
+                                   parent_map, scope_nodes)
+from tools.lintlib import Finding
+
+RULE = "egress-bypass"
+
+
+def _pool_receivers(scope: ast.AST) -> set[str]:
+    """Names in `scope` bound from a SharedTensorPool(...) constructor."""
+    names: set[str] = set()
+    for node in scope_nodes(scope):
+        if (isinstance(node, ast.Assign) and isinstance(node.value, ast.Call)
+                and call_name(node.value) in config.POOL_CONSTRUCTORS):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+    return names
+
+
+def _is_source(call: ast.Call, pool_names: set[str]) -> bool:
+    """True for ``<pool-like>.tensor(...)`` / ``.region(...)``."""
+    if not isinstance(call.func, ast.Attribute):
+        return False
+    if call.func.attr not in config.POOL_SOURCE_METHODS:
+        return False
+    root = name_root(call.func.value)
+    if root is None:
+        # SharedTensorPool(...).tensor(...) — constructor chain
+        return (isinstance(call.func.value, ast.Call)
+                and call_name(call.func.value) in config.POOL_CONSTRUCTORS)
+    if root in pool_names or config.POOL_NAME_HINT.search(root):
+        return True
+    recv = call.func.value
+    return (isinstance(recv, ast.Attribute)
+            and bool(config.POOL_NAME_HINT.search(recv.attr)))
+
+
+def _enclosing_call(node: ast.AST, parents) -> ast.Call | None:
+    """The Call this node is an argument of (climbing through keyword /
+    starred / collection wrappers), or None."""
+    child = node
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, ast.Call):
+            # being the call's *target* (func) is not an argument position
+            return None if cur.func is child else cur
+        if isinstance(cur, (ast.keyword, ast.Starred, ast.Tuple, ast.List)):
+            child = cur
+            cur = parents.get(cur)
+            continue
+        return None
+    return None
+
+
+def _judge_use(use: ast.AST, parents) -> str | None:
+    """Classify one load of a tainted value.
+
+    Returns None when the use is fine, ``"propagate"`` when the taint moves
+    to an assignment target, or a message string for a violation."""
+    parent = parents.get(use)
+    # metadata attribute read: x.shape, region.start_page, ...
+    if isinstance(parent, ast.Attribute) and parent.value is use:
+        if parent.attr in config.TAINT_SAFE_ATTRS:
+            return None
+        return f"attribute read `.{parent.attr}` on an unchecked pool value"
+    call = _enclosing_call(use, parents)
+    if call is not None:
+        name = call_name(call)
+        if name in config.CHECKED_SINKS:
+            return None
+        target = name or "<dynamic>"
+        return (f"unchecked pool value passed to `{target}(...)` "
+                f"(not a checked sink)")
+    if isinstance(parent, ast.Subscript) and parent.value is use:
+        return "unchecked pool value indexed directly"
+    if isinstance(parent, ast.Assign) and parent.value is use:
+        return "propagate"
+    if isinstance(parent, (ast.Return, ast.Yield)):
+        return "unchecked pool value escapes via return/yield"
+    if isinstance(parent, (ast.BinOp, ast.UnaryOp, ast.Compare)):
+        return "unchecked pool value read in an expression"
+    if isinstance(parent, ast.Expr):
+        return None           # bare statement: value discarded unread
+    return "unchecked pool value used outside the checked egress path"
+
+
+def run(tree: ast.Module, path: str) -> list[Finding]:
+    """Egress-bypass findings for one parsed file."""
+    findings: list[Finding] = []
+    parents = parent_map(tree)
+    for scope, qual in function_scopes(tree):
+        fn_name = qual.rsplit(".", 1)[-1]
+        if fn_name in config.TRUSTED_EGRESS_IMPLS:
+            continue
+        pool_names = _pool_receivers(scope)
+        nodes = scope_nodes(scope)
+        sources = [n for n in nodes if isinstance(n, ast.Call)
+                   and _is_source(n, pool_names)]
+        if not sources:
+            continue
+        # taint set: names bound (directly or transitively) to a source
+        tainted: set[str] = set()
+        for src in sources:
+            parent = parents.get(src)
+            if isinstance(parent, ast.Assign):
+                for t in parent.targets:
+                    if isinstance(t, ast.Name):
+                        tainted.add(t.id)
+            else:
+                verdict = _judge_use(src, parents)
+                if verdict not in (None, "propagate"):
+                    findings.append(Finding(
+                        RULE, path, src.lineno, f"{verdict} (in {qual})",
+                        key=f"{qual}:{verdict}"))
+        # propagate x -> y through plain re-binds, to a fixpoint
+        changed = True
+        while changed:
+            changed = False
+            for node in nodes:
+                if (isinstance(node, ast.Assign)
+                        and isinstance(node.value, ast.Name)
+                        and node.value.id in tainted):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name) and t.id not in tainted:
+                            tainted.add(t.id)
+                            changed = True
+        # judge every load of a tainted name
+        for node in nodes:
+            if not (isinstance(node, ast.Name) and node.id in tainted
+                    and isinstance(node.ctx, ast.Load)):
+                continue
+            verdict = _judge_use(node, parents)
+            if verdict in (None, "propagate"):
+                continue
+            findings.append(Finding(
+                RULE, path, node.lineno,
+                f"`{node.id}`: {verdict} (in {qual})",
+                key=f"{qual}:{node.id}:{verdict}"))
+    return findings

@@ -1,0 +1,204 @@
+"""Shared chassis for the repo's stdlib-only linters (docs_lint, isolint).
+
+One place for the pieces every static pass needs, so each linter is only
+its rules:
+
+  * `Finding` — one diagnostic: rule id, repo-relative path, line, message,
+    plus a line-number-free `key` so baselines survive unrelated edits;
+  * `iter_py_files` / `iter_source_files` — the file walker (skips
+    ``__pycache__``, hidden dirs, and non-``.py`` files);
+  * pragma parsing — ``# <tool>: allow(rule-a,rule-b) — reason`` on the
+    finding's line or the line directly above suppresses those rules there
+    (a pragma with an empty reason does NOT count: the reason is the audit
+    trail);
+  * baseline plumbing — a committed JSON list of finding identities; the
+    linter fails only on findings NOT in the baseline, and reports stale
+    baseline entries so the file ratchets toward empty;
+  * report writing — one JSON artifact per run for CI upload.
+
+CLI convention shared by both linters: ``--root`` (repo root), ``--report``
+(JSON artifact path), and for baseline-aware linters ``--baseline`` /
+``--write-baseline``.  Exit status 0 = clean, 1 = new findings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import re
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic.  `key` is the stable identity used for baselines and
+    pragma-independent dedup: it must not contain the line number, so a
+    baselined finding survives edits elsewhere in the file."""
+    rule: str
+    path: str           # repo-relative posix path
+    line: int
+    message: str
+    key: str = ""       # defaults to `message` when empty
+
+    @property
+    def identity(self) -> tuple[str, str, str]:
+        """(rule, path, key) triple that names this finding in baselines."""
+        return (self.rule, self.path, self.key or self.message)
+
+    def format(self) -> str:
+        """One-line human rendering: ``path:line rule message``."""
+        return f"{self.path}:{self.line} {self.rule} {self.message}"
+
+    def to_json(self) -> dict:
+        """JSON-report form (identity key included for tooling)."""
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message, "key": self.key or self.message}
+
+
+def rel_path(path: pathlib.Path, root: pathlib.Path) -> str:
+    """Repo-relative posix form of `path` (falls back to absolute)."""
+    try:
+        return path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+def iter_py_files(root: pathlib.Path, scopes) -> list[pathlib.Path]:
+    """Every ``.py`` file under each scope (file or directory, relative to
+    `root`), recursively, sorted; ``__pycache__`` and hidden dirs skipped."""
+    return iter_source_files(root, scopes, suffix=".py")
+
+
+def iter_source_files(root: pathlib.Path, scopes, *,
+                      suffix: str = ".py") -> list[pathlib.Path]:
+    """File walker shared by every linter: expand each scope (a file or a
+    directory path relative to `root` — absolute paths pass through) into
+    the sorted list of `suffix` files it contains."""
+    out: list[pathlib.Path] = []
+    for scope in scopes:
+        p = pathlib.Path(scope)
+        if not p.is_absolute():
+            p = root / p
+        if p.is_file():
+            if p.suffix == suffix:
+                out.append(p)
+            continue
+        if not p.is_dir():
+            raise FileNotFoundError(f"lint scope does not exist: {p}")
+        for f in sorted(p.rglob(f"*{suffix}")):
+            parts = f.relative_to(p).parts
+            if any(seg == "__pycache__" or seg.startswith(".")
+                   for seg in parts):
+                continue
+            out.append(f)
+    # dedupe while keeping order (overlapping scopes)
+    seen: set[pathlib.Path] = set()
+    uniq = []
+    for f in out:
+        r = f.resolve()
+        if r not in seen:
+            seen.add(r)
+            uniq.append(f)
+    return uniq
+
+
+# ---------------------------------------------------------------------------
+# Pragmas
+# ---------------------------------------------------------------------------
+
+def _pragma_re(tool: str) -> re.Pattern:
+    # "# isolint: allow(rule-a, rule-b) — reason text"; the reason separator
+    # accepts an em dash, "--", or a single "-", and the reason must be
+    # non-empty for the pragma to be honored.
+    return re.compile(
+        rf"#\s*{re.escape(tool)}:\s*allow\(([^)]*)\)\s*(?:—|--|-)\s*(\S.*)")
+
+
+def parse_pragmas(text: str, *, tool: str = "isolint") -> dict[int, set[str]]:
+    """``{line_number: {rule, ...}}`` for every well-formed allow pragma.
+
+    A pragma suppresses findings of the named rules on its own line and on
+    the line directly below (so a comment-only pragma line can precede the
+    flagged statement).  Malformed pragmas (no reason text) are returned
+    under the pseudo-rule ``"!malformed"`` so linters can surface them.
+    """
+    pat = _pragma_re(tool)
+    bare = re.compile(rf"#\s*{re.escape(tool)}:\s*allow\(([^)]*)\)")
+    out: dict[int, set[str]] = {}
+    for i, line in enumerate(text.splitlines(), start=1):
+        m = pat.search(line)
+        if m:
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            out.setdefault(i, set()).update(rules)
+        elif bare.search(line):
+            out.setdefault(i, set()).add("!malformed")
+    return out
+
+
+def pragma_allows(pragmas: dict[int, set[str]], line: int,
+                  rule: str) -> bool:
+    """True when a pragma on `line` or the line above covers `rule`."""
+    for ln in (line, line - 1):
+        rules = pragmas.get(ln)
+        if rules and (rule in rules or "*" in rules):
+            return True
+    return False
+
+
+def malformed_pragma_findings(pragmas: dict[int, set[str]], path: str,
+                              *, rule: str = "malformed-pragma"
+                              ) -> list[Finding]:
+    """A finding per pragma that omitted its reason text (the reason is the
+    audit trail — an allow with no stated reason is itself a violation)."""
+    return [
+        Finding(rule, path, ln,
+                "allow pragma without a reason — write "
+                "`# isolint: allow(rule) — why`", key=f"pragma@{ln}")
+        for ln, rules in sorted(pragmas.items()) if "!malformed" in rules
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: pathlib.Path) -> list[tuple[str, str, str]]:
+    """Finding identities from a baseline file (missing file = empty)."""
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text())
+    entries = data["entries"] if isinstance(data, dict) else data
+    return [(e["rule"], e["path"], e["key"]) for e in entries]
+
+
+def save_baseline(path: pathlib.Path, findings: list[Finding],
+                  *, tool: str) -> None:
+    """Write the current findings as the new accepted baseline."""
+    entries = [{"rule": r, "path": p, "key": k}
+               for r, p, k in sorted({f.identity for f in findings})]
+    path.write_text(json.dumps({"tool": tool, "entries": entries}, indent=1)
+                    + "\n")
+
+
+def partition_findings(findings: list[Finding],
+                       baseline: list[tuple[str, str, str]]):
+    """Split into (new, baselined, stale_baseline_entries).
+
+    `new` are findings whose identity is absent from the baseline (these
+    fail the run); `stale` are baseline entries no longer produced (safe to
+    delete — the baseline ratchets toward empty)."""
+    base = set(baseline)
+    new = [f for f in findings if f.identity not in base]
+    old = [f for f in findings if f.identity in base]
+    live = {f.identity for f in findings}
+    stale = sorted(base - live)
+    return new, old, stale
+
+
+def write_report(path: pathlib.Path, payload: dict) -> None:
+    """Write the JSON run artifact (CI uploads this)."""
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+
+
+def sort_findings(findings: list[Finding]) -> list[Finding]:
+    """Stable path/line/rule ordering for output and reports."""
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule, f.message))
